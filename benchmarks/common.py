@@ -1,0 +1,140 @@
+"""Shared machinery for the paper-reproduction benchmarks.
+
+All four experiments (matmul heatmap, Cholesky compositions, microservices,
+MD ensembles) run on the discrete-event executor at full node scale
+(112 slots / 2 sockets, the paper's Sapphire Rapids node), with workloads
+expressed as nested-runtime task graphs:
+
+  * an OUTER runtime = W worker tasks pulling work items from a channel
+    (OmpSs-2/oneTBB worker-per-core model);
+  * each work item opens an INNER parallel region: (n-1) spawned team
+    tasks + the worker itself, all meeting at a BLAS-style busy-wait
+    barrier (OpenBLAS/BLIS), optionally yield-adapted (§5.2);
+  * per-call thread create/destroy cost models the BLIS pthread backend
+    (Table 2's `pth` rows) vs thread caching.
+
+Calibration constants are CPU-node ballparks; the experiments measure
+RELATIVE policy effects (the paper's claims are ratios, not absolutes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import simtask as st
+from repro.core.events import SimExecutor
+from repro.core.policies import SchedCoop, SchedFair
+from repro.core.simtask import SimCosts
+from repro.core.task import Job, Task
+from repro.core.topology import node_topology
+
+CORES = 112          # 2 x 56 Sapphire Rapids
+CORE_GFLOPS = 50.0   # effective per-core DGEMM throughput
+SPIN_SLICE = 100e-6
+THREAD_CREATE_COST = 150e-6   # pthread create+destroy round trip
+
+
+@dataclasses.dataclass
+class StackConfig:
+    """One software-stack variant of §5.3 (Fig. 2)."""
+
+    name: str
+    policy: str = "fair"              # fair (Linux) | coop (SCHED_COOP)
+    yield_every: Optional[int] = 8    # busy-wait barrier adaptation; None=off
+    coop_barriers: bool = False       # Manual: nOS-V blocking barriers
+    thread_cache: bool = True         # False: create/destroy per region
+    quantum: float = 0.020
+
+
+STACKS = {
+    # unmodified busy-wait barriers under Linux
+    "original": StackConfig("original", policy="fair", yield_every=None),
+    # + sched_yield in the spin loop; Linux yield is weakly effective
+    # ("Linux might not yield immediately", §5.3) — every ~8th works
+    "baseline": StackConfig("baseline", policy="fair", yield_every=8),
+    # same stack under glibcv: sched_yield -> nosv_yield, which ALWAYS
+    # yields ("the matmul SCHED_COOP version always yields", §5.3)
+    "sched_coop": StackConfig("sched_coop", policy="coop", yield_every=1),
+    # + ad-hoc nOS-V integration: blocking barriers instead of spinning
+    "manual": StackConfig("manual", policy="coop", yield_every=1,
+                          coop_barriers=True),
+}
+
+
+def make_executor(stack: StackConfig, *, cores: int = CORES,
+                  max_time: float = 3600.0) -> SimExecutor:
+    policy = (SchedCoop(quantum=stack.quantum) if stack.policy == "coop"
+              else SchedFair(slice_s=0.003))
+    domains = 2 if cores % 2 == 0 else 1
+    return SimExecutor(node_topology(cores, domains), policy,
+                       costs=SimCosts(), max_time=max_time)
+
+
+def warmup_scale_for(ws_bytes: float, *, mem_bw: float = 10e9,
+                     base: float = 20e-6) -> float:
+    """Scale warm-up penalties by working-set size: refilling ws_bytes at
+    mem_bw should cost ws/mem_bw seconds against a `base`-second constant."""
+    return max(ws_bytes / mem_bw / base, 1.0)
+
+
+def inner_region(sim: SimExecutor, job: Job, work_s: float, n_threads: int,
+                 stack: StackConfig, *, n_syncs: int = 4, flops: float = 0.0,
+                 ws_bytes: float = 0.0):
+    """Generator: one BLAS call — fork an inner team, compute in n_syncs
+    phases separated by team barriers, join. Runs inside an outer task."""
+    if n_threads <= 1:
+        yield st.compute(work_s, flops=flops)
+        return
+
+    share = work_s / n_threads
+    phase = share / n_syncs
+    scale = warmup_scale_for(ws_bytes / n_threads) if ws_bytes else 1.0
+    if stack.coop_barriers:
+        bar = st.SimBarrier(n_threads)
+        bar_op = st.barrier_wait
+    else:
+        bar = st.SimSpinBarrier(n_threads, spin_slice=SPIN_SLICE,
+                                yield_every=stack.yield_every)
+        bar_op = st.spin_barrier_wait
+
+    def member():
+        if not stack.thread_cache:
+            yield st.compute(THREAD_CREATE_COST)  # pthread create overhead
+        for _ in range(n_syncs):
+            yield st.compute(phase, flops=flops / n_threads / n_syncs)
+            yield bar_op(bar)
+
+    children = []
+    for _ in range(n_threads - 1):
+        child = Task(job, body=member, name="team")
+        child._warmup_scale = scale  # cache working set per team member
+        children.append(child)
+        yield st.spawn(child)
+    # the calling worker is the team leader
+    for _ in range(n_syncs):
+        yield st.compute(phase, flops=flops / n_threads / n_syncs)
+        yield bar_op(bar)
+    for c in children:
+        yield st.join(c)
+
+
+def outer_runtime(sim: SimExecutor, job: Job, work_items: list,
+                  n_workers: int, stack: StackConfig, body_of_item):
+    """Spawn an outer worker pool that drains `work_items` from a channel.
+    `body_of_item(item)` returns a generator (usually an inner_region)."""
+    ch = st.SimChannel()
+    for it in work_items:
+        ch.items.append(it)
+    for _ in range(n_workers):
+        ch.items.append(None)  # poison pill per worker
+
+    def worker():
+        while True:
+            item = yield st.channel_get(ch)
+            if item is None:
+                return
+            yield from body_of_item(item)
+
+    return [sim.spawn(job, worker, name=f"{job.name}-w{i}")
+            for i in range(n_workers)]

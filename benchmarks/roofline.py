@@ -1,0 +1,88 @@
+"""Roofline table: reads results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun --all``) and prints the per-cell roofline
+terms, dominant bottleneck, usefulness ratio and MFU bound — the §Roofline
+deliverable, consumed verbatim by EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+DEFAULT_DIR = "results/dryrun"
+
+COLUMNS = ("arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+           "dominant,useful_ratio,mfu_bound,peak_GiB,fits")
+
+
+def load_rows(directory: str = DEFAULT_DIR) -> list[dict]:
+    rows = []
+    for p in sorted(pathlib.Path(directory).glob("*.json")):
+        d = json.loads(p.read_text())
+        row = {
+            "arch": d["arch"],
+            "shape": d["shape"],
+            "mesh": d["mesh"],
+            "status": d["status"],
+        }
+        if d["status"] == "skip":
+            row["reason"] = d.get("reason", "")
+        elif d["status"] == "ok" and "roofline" in d:
+            r = d["roofline"]
+            mem = d["full"]["memory"]
+            row.update(
+                compute_s=r["compute_s"],
+                memory_s=r["memory_s"],
+                collective_s=r["collective_s"],
+                dominant=r["dominant"],
+                useful_ratio=r["useful_flops_ratio"],
+                mfu_bound=r["mfu_bound"],
+                peak_gib=mem["peak_bytes_est"] / 2**30,
+                fits=mem["peak_bytes_est"] <= mem["hbm_capacity"],
+            )
+        else:
+            row["error"] = d.get("error", "")
+        rows.append(row)
+    return rows
+
+
+def print_table(rows: list[dict]) -> None:
+    print(COLUMNS)
+    for r in rows:
+        if r["status"] == "ok":
+            print(f"{r['arch']},{r['shape']},{r['mesh']},ok,"
+                  f"{r['compute_s']:.4f},{r['memory_s']:.4f},"
+                  f"{r['collective_s']:.4f},{r['dominant']},"
+                  f"{r['useful_ratio']:.3f},{r['mfu_bound']:.4f},"
+                  f"{r['peak_gib']:.2f},{int(r['fits'])}")
+        elif r["status"] == "skip":
+            print(f"{r['arch']},{r['shape']},{r['mesh']},skip"
+                  f",,,,,,,,  # {r.get('reason','')}")
+        else:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},error"
+                  f",,,,,,,,  # {r.get('error','')[:120]}")
+
+
+def main() -> int:
+    directory = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_DIR
+    rows = load_rows(directory)
+    if not rows:
+        print(f"# no dry-run results under {directory}; run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all` first")
+        return 1
+    print_table(rows)
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["mfu_bound"])
+        collb = max(ok, key=lambda r: r["collective_s"]
+                    / max(r["compute_s"], 1e-12))
+        print(f"# worst mfu_bound: {worst['arch']} x {worst['shape']} "
+              f"@ {worst['mesh']} ({worst['mfu_bound']:.4f})")
+        print(f"# most collective-bound: {collb['arch']} x {collb['shape']} "
+              f"@ {collb['mesh']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

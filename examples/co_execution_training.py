@@ -1,0 +1,71 @@
+"""Co-executed training jobs (paper §5.6 analogue) — REAL training, e2e.
+
+Two Trainer jobs (different smoke architectures) share a USF runtime:
+each trains a ~100-step run with checkpointing; blocking points (data
+prefetch, inter-step yields) let the scheduler interleave them per the
+per-job quantum. This is the end-to-end driver deliverable: a real model
+trained a few hundred steps with loss decreasing and checkpoint/restart.
+
+Run:  PYTHONPATH=src python examples/co_execution_training.py [--steps N]
+"""
+
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import get_smoke
+from repro.core.policies import SchedCoop
+from repro.core.task import Job
+from repro.core.threads import UsfRuntime
+from repro.core.topology import Topology
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    usf = UsfRuntime(Topology(1, 1), SchedCoop(quantum=0.25))
+    results = {}
+
+    def train_job(name, arch, steps, seed):
+        def body():
+            with tempfile.TemporaryDirectory() as d:
+                cfg = get_smoke(arch)
+                t = Trainer(
+                    cfg,
+                    TrainerConfig(steps=steps, global_batch=4, seq_len=64,
+                                  ckpt_dir=d, ckpt_every=50, peak_lr=1e-2,
+                                  warmup=10, seed=seed),
+                    usf=usf,
+                )
+                t.run(resume=False)
+                losses = [m["loss"] for m in t.metrics_log]
+                results[name] = losses
+
+        return body
+
+    jobs = [Job("job-a"), Job("job-b")]
+    tasks = [
+        usf.create(train_job("smollm", "smollm_360m", args.steps, 0),
+                   job=jobs[0], name="train-smollm"),
+        usf.create(train_job("danube", "h2o_danube_3_4b", args.steps, 1),
+                   job=jobs[1], name="train-danube"),
+    ]
+    for t in tasks:
+        assert usf.join(t, timeout=3600.0)
+
+    for name, losses in results.items():
+        print(f"{name}: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"over {len(losses)} steps "
+              f"({'DECREASED' if losses[-1] < losses[0] - 0.5 else 'flat'})")
+    s = usf.stats()
+    print(f"scheduler: dispatches={s['dispatches']} yields={s['yields']} "
+          f"preemptions={s['preemptions']} (SCHED_COOP: must be 0)")
+    usf.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro: USF/SCHED_COOP — a user-space cooperative scheduling framework for
+oversubscribed multi-runtime / multi-job JAX workloads on TPU pods.
+
+Reproduction of: Roca & Beltran, "Rethinking Thread Scheduling under
+Oversubscription: A User-Space Framework for Coordinating Multi-runtime and
+Multi-process Workloads" (PPoPP '26), adapted TPU-natively per DESIGN.md.
+"""
+
+__version__ = "1.0.0"

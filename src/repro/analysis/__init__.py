@@ -1,0 +1,5 @@
+from repro.analysis.hlo import parse_collectives, collective_bytes_per_device
+from repro.analysis.roofline import HW, roofline_terms
+
+__all__ = ["parse_collectives", "collective_bytes_per_device", "HW",
+           "roofline_terms"]

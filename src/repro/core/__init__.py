@@ -1,0 +1,43 @@
+"""USF core: the paper's contribution.
+
+A centralized, multi-job, user-space scheduling framework:
+
+* ``Topology``/``Slot``   — execution resources (cores on the paper's node;
+  device partitions on a TPU pod) grouped into locality domains (NUMA on the
+  paper's node; ICI neighborhoods on a pod).
+* ``Task``/``Job``        — schedulable work units owned by jobs (processes).
+* ``Scheduler``           — the central scheduler: one running task per slot,
+  worker swaps at blocking points only, pluggable policy.
+* ``policies``            — SCHED_COOP (the paper's default), SCHED_FAIR
+  (EEVDF-like preemptive stand-in for Linux), SCHED_RR.
+* ``sync``                — cooperative synchronization primitives with
+  per-object FIFO wait queues (paper Listing 1), including the busy-wait
+  barrier + yield adaptation of §5.2.
+* ``events``              — discrete-event executor (virtual time) used to run
+  the paper's experiments at pod scale deterministically.
+* ``threads``             — real-thread executor ("glibcv" analogue): gates
+  genuine Python threads (which dispatch genuine JAX work), preserves TLS,
+  caches threads across create/join cycles (§4.3.1).
+"""
+
+from repro.core.task import Task, Job, TaskState
+from repro.core.topology import Topology, Slot
+from repro.core.scheduler import Scheduler
+from repro.core.policies import SchedCoop, SchedFair, SchedRR, Policy
+from repro.core import sync
+from repro.core.stats import SchedStats
+
+__all__ = [
+    "Task",
+    "Job",
+    "TaskState",
+    "Topology",
+    "Slot",
+    "Scheduler",
+    "Policy",
+    "SchedCoop",
+    "SchedFair",
+    "SchedRR",
+    "sync",
+    "SchedStats",
+]

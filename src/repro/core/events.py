@@ -1,0 +1,471 @@
+"""Discrete-event executor for USF.
+
+Runs sim tasks (generators of ops, see simtask.py) on a virtual-time machine
+under any Policy, through the *same* Scheduler as the real-thread runtime.
+This is how we run the paper's experiments at node and pod scale on a 1-core
+container, deterministically.
+
+Fidelity notes:
+
+* Preemptive policies get per-slot ticks; preemption mid-compute splits the
+  segment and pays a context switch — this is where LHP/LWP emerge naturally
+  (a preempted mutex owner keeps its FIFO wait queue stalled).
+* Spin barriers consume slot time in ``spin_slice`` quanta; with
+  ``yield_every=None`` and a cooperative policy they livelock when waiters
+  exceed slots (paper §4.4) — the engine detects this and raises
+  ``SimLivelock`` instead of spinning forever.
+* Migration penalties (affinity warm-up) are charged on dispatch based on
+  topology distance.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, Callable, Optional
+
+from repro.core.policies.base import Policy
+from repro.core.scheduler import Scheduler
+from repro.core.simtask import (
+    SimBarrier,
+    SimChannel,
+    SimCondVar,
+    SimCosts,
+    SimMutex,
+    SimSemaphore,
+    SimSpinBarrier,
+)
+from repro.core.stats import SchedStats
+from repro.core.task import Job, Task, TaskState
+from repro.core.topology import Topology
+
+
+def _owned(task: Task) -> set:
+    s = getattr(task, "_owned_mutexes", None)
+    if s is None:
+        s = set()
+        task._owned_mutexes = s  # type: ignore[attr-defined]
+    return s
+
+
+class SimLivelock(RuntimeError):
+    pass
+
+
+class SimTimeout(RuntimeError):
+    pass
+
+
+class SimDeadlock(RuntimeError):
+    pass
+
+
+class SimExecutor:
+    def __init__(
+        self,
+        topology: Topology,
+        policy: Policy,
+        *,
+        costs: Optional[SimCosts] = None,
+        max_time: float = 3600.0,
+        max_events: int = 50_000_000,
+    ):
+        self.topology = topology
+        self.costs = costs or SimCosts()
+        self._now = 0.0
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.max_time = max_time
+        self.max_events = max_events
+        self._useful_flops = 0.0
+        #: Lock-Holder-Preemption events: a task preempted while owning a
+        #: mutex (the §1/§6 pathology SCHED_COOP eliminates by design).
+        self.lhp_preemptions = 0
+        self.sched = Scheduler(
+            topology,
+            policy,
+            clock=lambda: self._now,
+            dispatch=self._on_dispatch,
+            ctx_switch_cost=self.costs.ctx_switch,
+        )
+        self._tick_armed: set[int] = set()
+        #: cache residency: which task's working set last warmed each slot
+        self._slot_last: dict[int, int] = {}
+
+    # ------------------------------------------------------------------ #
+    # public API
+    # ------------------------------------------------------------------ #
+    def now(self) -> float:
+        return self._now
+
+    def spawn(self, job: Job, genfn: Callable[[], Any], *, name: str = "",
+              at: float = 0.0, warmup_scale: float = 1.0) -> Task:
+        """Create a task whose body is ``genfn()`` and submit it at time ``at``."""
+        task = Task(job, body=genfn, name=name)
+        task._warmup_scale = warmup_scale  # type: ignore[attr-defined]
+        if at <= self._now:
+            self._submit(task)
+        else:
+            self._post(at, lambda: self._submit(task))
+        return task
+
+    def run(self, *, until: Optional[float] = None) -> SchedStats:
+        """Drain all events (or run until virtual time ``until``)."""
+        limit = until if until is not None else self.max_time
+        n = 0
+        while self._heap:
+            t = self._heap[0][0]
+            if t > limit:
+                self._now = limit
+                if until is None:
+                    self._raise_stuck()
+                break
+            _, _, fn = heapq.heappop(self._heap)
+            self._now = t
+            fn()
+            n += 1
+            if n > self.max_events:
+                raise SimTimeout(f"event cap exceeded: {self.sched.snapshot()}")
+        if until is None and not self._heap:
+            undone = [t for t in self.sched.all_tasks if not t.done]
+            if undone:
+                raise SimDeadlock(
+                    f"no pending events but {len(undone)} tasks unfinished "
+                    f"(cooperative deadlock): {self.sched.snapshot()}"
+                )
+        return self.sched.stats()
+
+    @property
+    def useful_flops(self) -> float:
+        return self._useful_flops
+
+    # ------------------------------------------------------------------ #
+    # engine internals
+    # ------------------------------------------------------------------ #
+    def _post(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def _submit(self, task: Task) -> None:
+        task._gen = task.body()  # type: ignore[attr-defined]
+        task._send = None  # type: ignore[attr-defined]
+        task._epoch = 0  # type: ignore[attr-defined]
+        task._pending = None  # type: ignore[attr-defined]  # resumable op state
+        self.sched.submit(task)
+
+    def _on_dispatch(self, task: Task, slot_id: int) -> None:
+        """Scheduler picked ``task`` for ``slot_id``: resume after swap costs."""
+        epoch = task._epoch  # type: ignore[attr-defined]
+        scale = getattr(task, "_warmup_scale", 1.0)
+        delay = self.costs.ctx_switch + self.costs.dispatch_latency
+        if task.last_slot is not None and task.last_slot != slot_id:
+            dist = self.topology.distance(task.last_slot, slot_id)
+            delay += self.costs.migration_penalty(dist) * scale
+        elif (task.last_slot == slot_id
+              and self._slot_last.get(slot_id) not in (None, task.tid)):
+            # back on its own slot, but another task polluted the cache in
+            # between (preemption/interleaving noise — paper §1, §5.3)
+            delay += self.costs.cache_refill * scale
+        self._slot_last[slot_id] = task.tid
+        self._post(self._now + delay, lambda: self._resume(task, slot_id, epoch))
+        self._arm_tick(slot_id)
+
+    def _valid(self, task: Task, slot_id: int, epoch: int) -> bool:
+        return (
+            task._epoch == epoch  # type: ignore[attr-defined]
+            and task.state is TaskState.RUNNING
+            and task.slot == slot_id
+        )
+
+    def _bump(self, task: Task) -> None:
+        task._epoch += 1  # type: ignore[attr-defined]
+
+    def _resume(self, task: Task, slot_id: int, epoch: int) -> None:
+        if not self._valid(task, slot_id, epoch):
+            return
+        pending = task._pending  # type: ignore[attr-defined]
+        if pending is None:
+            self._advance(task, slot_id)
+        elif pending[0] == "compute":
+            _, remaining, flops = pending
+            self._start_compute(task, slot_id, remaining, flops)
+        elif pending[0] == "spin":
+            _, bar, gen, iters = pending
+            self._spin_check(task, slot_id, bar, gen, iters)
+        else:  # pragma: no cover - defensive
+            raise AssertionError(pending)
+
+    # -- generator advancement ------------------------------------------ #
+    def _advance(self, task: Task, slot_id: int) -> None:
+        """Pull ops from the task generator until it blocks/computes/ends."""
+        gen = task._gen  # type: ignore[attr-defined]
+        while True:
+            try:
+                send = task._send  # type: ignore[attr-defined]
+                task._send = None  # type: ignore[attr-defined]
+                op = gen.send(send)
+            except StopIteration:
+                self._bump(task)
+                self.sched.finish(task)
+                return
+            if not self._handle(task, slot_id, op):
+                return  # task no longer advancing synchronously
+
+    def _handle(self, task: Task, slot_id: int, op: tuple) -> bool:
+        """Returns True if the generator should keep advancing right now."""
+        kind = op[0]
+
+        if kind == "compute":
+            self._start_compute(task, slot_id, op[1], op[2])
+            return False
+
+        if kind == "stall":
+            # holds the slot, not useful, not a scheduling point (§5.6)
+            epoch = task._epoch  # type: ignore[attr-defined]
+            dt = op[1]
+            task.stats.spin_time += dt
+
+            def stall_done() -> None:
+                if self._valid(task, slot_id, epoch):
+                    self._advance(task, slot_id)
+
+            self._post(self._now + dt, stall_done)
+            return False
+
+        if kind == "lock":
+            m: SimMutex = op[1]
+            if m.owner is None:
+                m.owner = task
+                _owned(task).add(m)
+                return True
+            m.queue.append(task)  # FIFO wait queue (Listing 1)
+            self._block(task)
+            # on resume, ownership will have been transferred to us
+            _owned(task).add(m)
+            return False
+
+        if kind == "unlock":
+            m = op[1]
+            if m.owner is not task:
+                raise RuntimeError(f"{task} unlocks mutex it does not own")
+            _owned(task).discard(m)
+            if m.queue:
+                nxt = m.queue.popleft()
+                m.owner = nxt          # ownership transfer (Listing 1)
+                self.sched.unblock(nxt)
+            else:
+                m.owner = None
+            return True
+
+        if kind == "barrier":
+            b: SimBarrier = op[1]
+            b.count += 1
+            if b.count == b.parties:
+                b.count = 0
+                b.generation += 1
+                waiters, b.waiting = list(b.waiting), type(b.waiting)()
+                for w in waiters:
+                    self.sched.unblock(w)
+                return True  # last arrival proceeds without blocking
+            b.waiting.append(task)
+            self._block(task)
+            return False
+
+        if kind == "spin_barrier":
+            b2: SimSpinBarrier = op[1]
+            gen_at_arrival = b2.generation
+            b2.count += 1
+            if b2.count == b2.parties:
+                b2.count = 0
+                b2.generation += 1  # releases all spinners at their next check
+                return True
+            task._pending = ("spin", b2, gen_at_arrival, 0)  # type: ignore[attr-defined]
+            self._spin_check(task, slot_id, b2, gen_at_arrival, 0)
+            return False
+
+        if kind == "sem_acquire":
+            s: SimSemaphore = op[1]
+            if s.value > 0:
+                s.value -= 1
+                return True
+            s.queue.append(task)
+            self._block(task)
+            return False
+
+        if kind == "sem_release":
+            s = op[1]
+            if s.queue:
+                self.sched.unblock(s.queue.popleft())
+            else:
+                s.value += 1
+            return True
+
+        if kind == "cv_wait":
+            cv: SimCondVar = op[1]
+            m = op[2]
+            if m.owner is not task:
+                raise RuntimeError("cv_wait without holding the mutex")
+            cv.waiting.append((task, m))
+            # release the mutex (with FIFO handoff) then block
+            if m.queue:
+                nxt = m.queue.popleft()
+                m.owner = nxt
+                self.sched.unblock(nxt)
+            else:
+                m.owner = None
+            self._block(task)
+            return False
+
+        if kind == "cv_notify":
+            cv = op[1]
+            n = op[2]
+            for _ in range(min(n, len(cv.waiting))):
+                w, wm = cv.waiting.popleft()
+                # re-acquire the mutex on the waiter's behalf before resume
+                if wm.owner is None:
+                    wm.owner = w
+                    self.sched.unblock(w)
+                else:
+                    wm.queue.append(w)  # stays BLOCKED until unlock hands off
+            return True
+
+        if kind == "sleep":
+            dt = op[1]
+            self._block(task)
+            self._post(self._now + dt, lambda: self.sched.unblock(task))
+            return False
+
+        if kind == "yield":
+            self._bump(task)
+            self.sched.yield_(task)
+            return False
+
+        if kind == "spawn":
+            child: Task = op[1]
+            if getattr(child, "_gen", None) is None:
+                self._submit(child)
+            else:
+                self.sched.submit(child)
+            return True
+
+        if kind == "join":
+            child = op[1]
+            if child.done:
+                return True
+            self._block(task)
+            child.on_done.append(lambda _t: self.sched.unblock(task))
+            return False
+
+        if kind == "channel_put":
+            ch: SimChannel = op[1]
+            if ch.getters:
+                getter = ch.getters.popleft()
+                getter._send = op[2]  # type: ignore[attr-defined]
+                self.sched.unblock(getter)
+            else:
+                ch.items.append(op[2])
+            return True
+
+        if kind == "channel_get":
+            ch = op[1]
+            if ch.items:
+                task._send = ch.items.popleft()  # type: ignore[attr-defined]
+                return True
+            ch.getters.append(task)
+            self._block(task)
+            return False
+
+        raise RuntimeError(f"unknown op {op!r}")
+
+    # -- compute & spin -------------------------------------------------- #
+    def _start_compute(self, task: Task, slot_id: int, dt: float, flops: float) -> None:
+        epoch = task._epoch  # type: ignore[attr-defined]
+        task._pending = ("compute", dt, flops)  # type: ignore[attr-defined]
+        task._pending_started = self._now  # type: ignore[attr-defined]
+
+        def compute_done() -> None:
+            if self._valid(task, slot_id, epoch):
+                task._pending = None  # type: ignore[attr-defined]
+                self._useful_flops += flops
+                self._advance(task, slot_id)
+
+        self._post(self._now + dt, compute_done)
+
+    def _spin_check(
+        self,
+        task: Task,
+        slot_id: int,
+        bar: SimSpinBarrier,
+        my_gen: int,
+        iters: int,
+    ) -> None:
+        """One busy-wait poll iteration (consumes slot time). Only called
+        while the task validly runs; ``task._pending`` always holds current
+        spin state so preemption/resume can continue the spin."""
+        if bar.generation != my_gen:
+            task._pending = None  # type: ignore[attr-defined]
+            self._advance(task, slot_id)  # released
+            return
+        task.stats.spin_time += bar.spin_slice
+        nxt = iters + 1
+        task._pending = ("spin", bar, my_gen, nxt)  # type: ignore[attr-defined]
+        ye = bar.yield_every
+        if ye is not None and (ye == 0 or nxt % ye == 0):
+            # the §5.2 adaptation: occasionally sched_yield inside the spin
+            self._bump(task)
+            self.sched.yield_(task)
+            return
+        epoch = task._epoch  # type: ignore[attr-defined]
+
+        def again() -> None:
+            if self._valid(task, slot_id, epoch):
+                self._spin_check(task, slot_id, bar, my_gen, nxt)
+            # else: preempted mid-spin; _pending already saved
+
+        self._post(self._now + bar.spin_slice, again)
+
+    # -- blocking helper -------------------------------------------------- #
+    def _block(self, task: Task) -> None:
+        self._bump(task)
+        self.sched.block(task)
+
+    # -- preemption ticks -------------------------------------------------- #
+    def _arm_tick(self, slot_id: int) -> None:
+        pol = self.sched.policy
+        if not pol.preemptive or pol.tick_interval is None:
+            return
+        if slot_id in self._tick_armed:
+            return
+        self._tick_armed.add(slot_id)
+        self._post(self._now + pol.tick_interval, lambda: self._tick(slot_id))
+
+    def _tick(self, slot_id: int) -> None:
+        self._tick_armed.discard(slot_id)
+        running = self.sched.running_tasks()[slot_id]
+        if running is None:
+            return  # re-armed on next dispatch
+        if self.sched.tick(slot_id):
+            task = running
+            if _owned(task):
+                self.lhp_preemptions += 1  # preempted a lock holder (LHP)
+            pend = task._pending  # type: ignore[attr-defined]
+            if pend is not None and pend[0] == "compute":
+                ran = self._now - task._pending_started  # type: ignore[attr-defined]
+                left = max(pend[1] - ran, 0.0)
+                task._pending = ("compute", left, pend[2])  # type: ignore[attr-defined]
+            self._bump(task)
+            self.sched.preempt(task)
+        self._arm_tick(slot_id)
+
+    # -- failure diagnosis -------------------------------------------------- #
+    def _raise_stuck(self) -> None:
+        snap = self.sched.snapshot()
+        undone = [t for t in self.sched.all_tasks if not t.done]
+        if undone:
+            spinning = snap["slots_busy"] > 0
+            msg = f"simulation exceeded max_time={self.max_time}s: {snap}"
+            if spinning:
+                raise SimLivelock(
+                    msg + " — busy-wait livelock (paper §4.4: adapt the "
+                    "barrier with yield_every)"
+                )
+            raise SimTimeout(msg)

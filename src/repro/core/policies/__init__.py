@@ -1,0 +1,6 @@
+from repro.core.policies.base import Policy, StopReason
+from repro.core.policies.sched_coop import SchedCoop
+from repro.core.policies.sched_fair import SchedFair
+from repro.core.policies.sched_rr import SchedRR
+
+__all__ = ["Policy", "StopReason", "SchedCoop", "SchedFair", "SchedRR"]

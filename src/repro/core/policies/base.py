@@ -1,0 +1,68 @@
+"""Policy interface — the user-extensible part of USF.
+
+The paper's pitch is that USF "enables users to implement their own process
+scheduling algorithms without requiring special permissions"; this class is
+that extension point. A policy only sees scheduling points; the Scheduler
+enforces the framework invariants around it.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.scheduler import Scheduler
+    from repro.core.task import Job, Task
+
+
+class StopReason(enum.Enum):
+    BLOCK = "block"
+    YIELD = "yield"
+    DONE = "done"
+    PREEMPT = "preempt"
+
+
+class Policy:
+    """Base policy. Subclasses override the queueing/picking logic."""
+
+    name: str = "base"
+    #: preemptive policies model the OS baseline; SCHED_COOP must keep False.
+    preemptive: bool = False
+    #: sim-engine tick granularity for preemptive policies (seconds).
+    tick_interval: Optional[float] = None
+
+    def __init__(self) -> None:
+        self.sched: Optional["Scheduler"] = None
+
+    # -- lifecycle ------------------------------------------------------ #
+    def attach(self, sched: "Scheduler") -> None:
+        self.sched = sched
+
+    def on_job(self, job: "Job") -> None:
+        """A job (process) registered with the scheduler."""
+
+    # -- scheduling points ---------------------------------------------- #
+    def on_ready(self, task: "Task") -> None:
+        raise NotImplementedError
+
+    def pick(self, slot_id: int) -> Optional["Task"]:
+        raise NotImplementedError
+
+    def on_run(self, task: "Task", slot_id: int, now: float) -> None:
+        pass
+
+    def on_stop(
+        self, task: "Task", slot_id: int, now: float, elapsed: float, reason: StopReason
+    ) -> None:
+        pass
+
+    def should_preempt(self, task: "Task", slot_id: int, now: float) -> bool:
+        return False
+
+    # -- introspection --------------------------------------------------- #
+    def ready_count(self) -> int:
+        raise NotImplementedError
+
+    def has_ready(self) -> bool:
+        return self.ready_count() > 0

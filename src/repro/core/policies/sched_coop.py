@@ -1,0 +1,147 @@
+"""SCHED_COOP — the paper's default cooperative policy (§3, §4.1).
+
+Behaviour reproduced from the paper:
+
+* Threads run uninterrupted with fixed single-slot affinity until the
+  *application* makes them wait; SCHED_COOP never preempts (I2).
+* A previously blocked task is queued in a **per-job, per-slot FIFO** keyed
+  by the last slot it ran on.
+* Placement search order: idle slot matching affinity → same locality
+  domain (NUMA / ICI neighborhood) → anywhere.
+* A per-job quantum (default 20 ms), **evaluated only at scheduling
+  points**, rotates service between jobs; like nOS-V, the rotation is
+  work-conserving: if the current job has nothing ready for a slot, tasks
+  of other jobs are served rather than idling the slot.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from typing import Deque, Optional
+
+from repro.core.policies.base import Policy, StopReason
+from repro.core.task import Job, Task
+
+DEFAULT_QUANTUM = 0.020  # 20 ms, the paper's default
+
+
+class _JobQueues:
+    """Per-job ready queues: one FIFO per preferred slot + one unaffine FIFO."""
+
+    __slots__ = ("job", "per_slot", "unaffine", "size")
+
+    def __init__(self, job: Job):
+        self.job = job
+        self.per_slot: dict[int, Deque[Task]] = {}
+        self.unaffine: Deque[Task] = deque()
+        self.size = 0
+
+    def push(self, task: Task) -> None:
+        # A yielding task goes to the back of the global order (nosv_yield):
+        # re-enqueueing it by affinity would let it get re-picked instantly,
+        # defeating the §5.2 busy-wait adaptation.
+        if getattr(task, "_yielded", False):
+            task._yielded = False  # type: ignore[attr-defined]
+            self.unaffine.append(task)
+        elif task.last_slot is None:
+            self.unaffine.append(task)
+        else:
+            self.per_slot.setdefault(task.last_slot, deque()).append(task)
+        self.size += 1
+
+    def pop_for(self, slot_id: int, neighbors) -> Optional[Task]:
+        """Affinity → unaffine (new work) → same domain → anywhere (§4.1)."""
+        q = self.per_slot.get(slot_id)
+        if q:
+            self.size -= 1
+            return q.popleft()
+        if self.unaffine:
+            self.size -= 1
+            return self.unaffine.popleft()
+        for s in neighbors:  # distance-ordered, slot_id first (already tried)
+            q = self.per_slot.get(s.sid)
+            if q:
+                self.size -= 1
+                return q.popleft()
+        return None
+
+
+class SchedCoop(Policy):
+    name = "SCHED_COOP"
+    preemptive = False
+
+    def __init__(self, *, quantum: float = DEFAULT_QUANTUM):
+        super().__init__()
+        self.default_quantum = quantum
+        self._jobs: "OrderedDict[int, _JobQueues]" = OrderedDict()
+        self._current_jid: Optional[int] = None
+        self._quantum_used: float = 0.0
+
+    # -- job management -------------------------------------------------- #
+    def on_job(self, job: Job) -> None:
+        if job.jid not in self._jobs:
+            self._jobs[job.jid] = _JobQueues(job)
+            if self._current_jid is None:
+                self._current_jid = job.jid
+
+    # -- queueing --------------------------------------------------------- #
+    def on_ready(self, task: Task) -> None:
+        self.on_job(task.job)
+        self._jobs[task.job.jid].push(task)
+
+    def _job_quantum(self, jid: int) -> float:
+        q = self._jobs[jid].job.quantum
+        return q if q is not None else self.default_quantum
+
+    def _rotate_if_expired(self) -> None:
+        """Quantum evaluation — only ever called from scheduling points."""
+        if self._current_jid is None:
+            return
+        if self._quantum_used >= self._job_quantum(self._current_jid):
+            self._advance_current()
+
+    def _advance_current(self) -> None:
+        jids = list(self._jobs.keys())
+        if not jids:
+            return
+        try:
+            i = jids.index(self._current_jid)
+        except ValueError:
+            i = -1
+        n = len(jids)
+        # next job with ready tasks; else keep rotating pointer anyway
+        for off in range(1, n + 1):
+            jid = jids[(i + off) % n]
+            self._current_jid = jid
+            self._quantum_used = 0.0
+            if self._jobs[jid].size > 0:
+                return
+
+    def _rotation_order(self) -> list[int]:
+        jids = list(self._jobs.keys())
+        if self._current_jid is None or self._current_jid not in self._jobs:
+            return jids
+        i = jids.index(self._current_jid)
+        return jids[i:] + jids[:i]
+
+    # -- picking ----------------------------------------------------------- #
+    def pick(self, slot_id: int) -> Optional[Task]:
+        self._rotate_if_expired()
+        assert self.sched is not None
+        neighbors = list(self.sched.topology.neighbors_first(slot_id))
+        for jid in self._rotation_order():
+            task = self._jobs[jid].pop_for(slot_id, neighbors)
+            if task is not None:
+                return task
+        return None
+
+    # -- accounting --------------------------------------------------------- #
+    def on_stop(
+        self, task: Task, slot_id: int, now: float, elapsed: float, reason: StopReason
+    ) -> None:
+        if task.job.jid == self._current_jid:
+            self._quantum_used += elapsed
+
+    # -- introspection ------------------------------------------------------- #
+    def ready_count(self) -> int:
+        return sum(j.size for j in self._jobs.values())

@@ -1,0 +1,107 @@
+"""SCHED_FAIR — EEVDF-like preemptive baseline (the Linux stand-in, §2.1).
+
+Earliest Eligible Virtual Deadline First [Stoica & Abdel-Wahab '95], the
+Linux default since 6.6:
+
+* each task accrues *virtual runtime* at rate 1/weight (weight from nice);
+* a task is *eligible* when its vruntime is not ahead of the pool's virtual
+  time V (its lag is >= 0);
+* among eligible tasks, pick the earliest virtual deadline
+  ``vd = vruntime + slice/weight``;
+* running tasks are preempted when their slice expires (time quantum),
+  regardless of what they are doing — this is precisely the behaviour that
+  produces Lock-Holder/Lock-Waiter Preemption under oversubscription.
+
+Placement is affinity-blind by design: like the kernel's fair class with
+regular load balancing, tasks migrate freely between slots, modelling the
+"OS lack of application awareness" the paper discusses.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.policies.base import Policy, StopReason
+from repro.core.task import Task
+
+DEFAULT_SLICE = 0.003  # ~3 ms, Linux base_slice ballpark
+
+
+def nice_to_weight(nice: int) -> float:
+    """Linux sched_prio_to_weight spacing: ~+10% CPU per -1 nice."""
+    return 1024.0 / (1.25 ** nice)
+
+
+class SchedFair(Policy):
+    name = "SCHED_FAIR"
+    preemptive = True
+
+    def __init__(self, *, slice_s: float = DEFAULT_SLICE):
+        super().__init__()
+        self.slice_s = slice_s
+        self.tick_interval = slice_s
+        self._ready: list[Task] = []
+        self._vruntime: dict[int, float] = {}
+        self._run_started: dict[int, float] = {}
+        self._min_vruntime = 0.0
+
+    # -- helpers ---------------------------------------------------------- #
+    def _w(self, task: Task) -> float:
+        return nice_to_weight(task.job.nice)
+
+    def _vr(self, task: Task) -> float:
+        return self._vruntime.setdefault(task.tid, self._min_vruntime)
+
+    def _pool_virtual_time(self) -> float:
+        """V = weighted average vruntime over the ready pool."""
+        if not self._ready:
+            return self._min_vruntime
+        wsum = sum(self._w(t) for t in self._ready)
+        return sum(self._vr(t) * self._w(t) for t in self._ready) / wsum
+
+    def _deadline(self, task: Task) -> float:
+        return self._vr(task) + self.slice_s / self._w(task)
+
+    # -- policy ----------------------------------------------------------- #
+    def on_ready(self, task: Task) -> None:
+        # Sleepers rejoin at max(own vruntime, pool floor): they don't hoard
+        # lag while blocked (Linux place_entity behaviour, simplified).
+        self._vruntime[task.tid] = max(self._vr(task), self._min_vruntime)
+        self._ready.append(task)
+
+    def pick(self, slot_id: int) -> Optional[Task]:
+        if not self._ready:
+            return None
+        V = self._pool_virtual_time()
+        eligible = [t for t in self._ready if self._vr(t) <= V + 1e-12]
+        pool = eligible if eligible else self._ready
+        # wake affinity (select_task_rq prev-CPU preference): among the
+        # eligible set, prefer tasks that last ran on this slot
+        local = [t for t in pool if t.last_slot in (slot_id, None)]
+        best = min(local or pool, key=self._deadline)
+        self._ready.remove(best)
+        return best
+
+    def on_run(self, task: Task, slot_id: int, now: float) -> None:
+        self._run_started[task.tid] = now
+
+    def on_stop(
+        self, task: Task, slot_id: int, now: float, elapsed: float, reason: StopReason
+    ) -> None:
+        vr = self._vr(task) + elapsed / self._w(task)
+        self._vruntime[task.tid] = vr
+        if self._ready:
+            self._min_vruntime = max(
+                self._min_vruntime, min(self._vr(t) for t in self._ready)
+            )
+        else:
+            self._min_vruntime = max(self._min_vruntime, vr)
+
+    def should_preempt(self, task: Task, slot_id: int, now: float) -> bool:
+        if not self._ready:
+            return False  # nothing to run instead: keep going
+        ran = now - self._run_started.get(task.tid, now)
+        return ran >= self.slice_s / self._w(task)
+
+    def ready_count(self) -> int:
+        return len(self._ready)

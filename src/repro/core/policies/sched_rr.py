@@ -1,0 +1,45 @@
+"""SCHED_RR — round-robin preemptive baseline (paper §3 comparison point).
+
+A single global FIFO; running tasks are preempted when their quantum expires
+and requeued at the tail. Unlike the real SCHED_RR class it has no priority
+bands — the paper only uses it as a conceptual reference ("SCHED_COOP
+resembles SCHED_RR, where threads run until they yield or block", except
+SCHED_RR still time-slices among same-priority peers).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Optional
+
+from repro.core.policies.base import Policy, StopReason
+from repro.core.task import Task
+
+
+class SchedRR(Policy):
+    name = "SCHED_RR"
+    preemptive = True
+
+    def __init__(self, *, quantum: float = 0.010):
+        super().__init__()
+        self.quantum = quantum
+        self.tick_interval = quantum
+        self._q: Deque[Task] = deque()
+        self._run_started: dict[int, float] = {}
+
+    def on_ready(self, task: Task) -> None:
+        self._q.append(task)
+
+    def pick(self, slot_id: int) -> Optional[Task]:
+        return self._q.popleft() if self._q else None
+
+    def on_run(self, task: Task, slot_id: int, now: float) -> None:
+        self._run_started[task.tid] = now
+
+    def should_preempt(self, task: Task, slot_id: int, now: float) -> bool:
+        if not self._q:
+            return False
+        return (now - self._run_started.get(task.tid, now)) >= self.quantum
+
+    def ready_count(self) -> int:
+        return len(self._q)

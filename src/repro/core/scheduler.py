@@ -1,0 +1,268 @@
+"""The centralized USF scheduler.
+
+Invariants (paper §2.3/§4.1, property-tested in tests/test_scheduler_props.py):
+
+  I1. At most one RUNNING task per slot at any time ("exactly one running
+      worker pinned per core").
+  I2. Task swaps happen only at *scheduling points*: block, yield, end — or
+      an explicit preemption tick when a preemptive baseline policy is
+      active (the Linux stand-in). SCHED_COOP never preempts.
+  I3. Unblocked tasks are NOT resumed immediately; they are queued and the
+      policy decides placement later (§4.1 "these threads are not resumed
+      immediately. Instead, they are queued within the scheduler").
+  I4. A task that ends its body is parked, not destroyed, when a worker
+      cache is attached (§4.3.1) — executor-level behaviour.
+
+The scheduler is executor-agnostic: the discrete-event engine (events.py)
+and the real-thread runtime (threads.py) both drive it through the same
+six entry points: ``submit / block / unblock / yield_ / finish / tick``.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Optional
+
+from repro.core.policies.base import Policy, StopReason
+from repro.core.stats import SchedStats, collect
+from repro.core.task import Job, Task, TaskState
+from repro.core.topology import Topology
+
+
+class SchedulerError(RuntimeError):
+    pass
+
+
+class _SlotState:
+    __slots__ = ("running", "run_started", "idle_since")
+
+    def __init__(self) -> None:
+        self.running: Optional[Task] = None
+        self.run_started: float = 0.0
+        self.idle_since: float = 0.0
+
+
+class Scheduler:
+    """Central multi-job scheduler (the shared nOS-V instance analogue).
+
+    Parameters
+    ----------
+    topology:  the slot/domain layout.
+    policy:    scheduling policy (SCHED_COOP by default at call sites).
+    clock:     zero-arg callable returning the current time. Virtual in the
+               event engine, ``time.monotonic`` in the thread runtime.
+    dispatch:  executor callback ``(task, slot_id) -> None`` that actually
+               resumes the task on the slot.
+    ctx_switch_cost: accounted (and, in the sim, *charged*) per swap.
+    """
+
+    def __init__(
+        self,
+        topology: Topology,
+        policy: Policy,
+        *,
+        clock: Callable[[], float],
+        dispatch: Callable[[Task, int], None],
+        ctx_switch_cost: float = 0.0,
+    ):
+        self.topology = topology
+        self.policy = policy
+        self.clock = clock
+        self._dispatch_cb = dispatch
+        self.ctx_switch_cost = ctx_switch_cost
+        self._slots = [_SlotState() for _ in topology.slots]
+        self.jobs: dict[int, Job] = {}
+        self.all_tasks: list[Task] = []
+        self._lock = threading.RLock()
+        self._ctx_switch_time = 0.0
+        self._started_at = self.clock()
+        policy.attach(self)
+
+    # ------------------------------------------------------------------ #
+    # job / task registration (nOS-V process registration analogue)
+    # ------------------------------------------------------------------ #
+    def register_job(self, job: Job) -> Job:
+        with self._lock:
+            self.jobs[job.jid] = job
+            self.policy.on_job(job)
+        return job
+
+    # ------------------------------------------------------------------ #
+    # the six scheduling entry points
+    # ------------------------------------------------------------------ #
+    def submit(self, task: Task) -> None:
+        """New or re-submitted task becomes READY and is queued (never runs
+        directly — glibcv blocks freshly created pthreads until dispatched)."""
+        with self._lock:
+            if task.job.jid not in self.jobs:
+                self.register_job(task.job)
+            if task.state is TaskState.CREATED:
+                self.all_tasks.append(task)
+                task.stats.created_at = self.clock()
+            self._make_ready(task)
+            self._fill_idle_slots()
+
+    def block(self, task: Task) -> Optional[Task]:
+        """Task reached a blocking point: free its slot, swap in the next.
+
+        Returns the replacement task (for the executor), if any. If an
+        ``unblock`` raced ahead of this block (real threads), the task is
+        requeued immediately instead of parking (futex wake-before-wait).
+        """
+        with self._lock:
+            slot = self._stop_running(task, StopReason.BLOCK)
+            if task._pending_wakeups > 0:
+                task._pending_wakeups -= 1
+                self._make_ready(task)
+            else:
+                task.state = TaskState.BLOCKED
+                task._blocked_at = self.clock()  # type: ignore[attr-defined]
+            return self._fill(slot)
+
+    def unblock(self, task: Task) -> None:
+        """Blocking condition satisfied: queue the task (I3), fill idle slots."""
+        with self._lock:
+            if task.state is not TaskState.BLOCKED:
+                # raced ahead of the block (real-thread mode): remember it
+                task._pending_wakeups += 1
+                return
+            task.stats.blocked_time += self.clock() - task._blocked_at  # type: ignore[attr-defined]
+            self._make_ready(task)
+            self._fill_idle_slots()
+
+    def yield_(self, task: Task) -> Optional[Task]:
+        """Voluntary yield (sched_yield / nosv_yield): requeue behind peers.
+
+        Returns the task to run next on the slot (possibly the same task when
+        nothing else is ready — yield is then a no-op, as on Linux).
+        """
+        with self._lock:
+            slot = self._stop_running(task, StopReason.YIELD)
+            task.stats.yields += 1
+            task._yielded = True  # policies deprioritize: go to the back
+            self._make_ready(task)
+            return self._fill(slot)
+
+    def finish(self, task: Task) -> Optional[Task]:
+        """Task body ended: mark DONE, run callbacks, swap in the next."""
+        with self._lock:
+            slot = self._stop_running(task, StopReason.DONE)
+            task.state = TaskState.DONE
+            task.stats.done_at = self.clock()
+            for cb in task.on_done:
+                cb(task)
+            return self._fill(slot)
+
+    def preempt(self, task: Task) -> Optional[Task]:
+        """Involuntary preemption — only preemptive baseline policies."""
+        with self._lock:
+            if not self.policy.preemptive:
+                raise SchedulerError(f"{self.policy.name} must not preempt (I2)")
+            slot = self._stop_running(task, StopReason.PREEMPT)
+            task.stats.preemptions += 1
+            self._make_ready(task)
+            return self._fill(slot)
+
+    def tick(self, slot_id: int) -> bool:
+        """Periodic tick (preemptive policies): should the slot's task be
+        preempted now? The *executor* then calls ``preempt``."""
+        with self._lock:
+            st = self._slots[slot_id]
+            if st.running is None or not self.policy.preemptive:
+                return False
+            return self.policy.should_preempt(st.running, slot_id, self.clock())
+
+    # ------------------------------------------------------------------ #
+    # internals
+    # ------------------------------------------------------------------ #
+    def _make_ready(self, task: Task) -> None:
+        task.state = TaskState.READY
+        task._ready_at = self.clock()  # type: ignore[attr-defined]
+        self.policy.on_ready(task)
+
+    def _stop_running(self, task: Task, reason: StopReason) -> int:
+        if task.state is not TaskState.RUNNING or task.slot is None:
+            raise SchedulerError(f"stop of non-running {task}")
+        slot = task.slot
+        st = self._slots[slot]
+        if st.running is not task:  # I1 violated
+            raise SchedulerError(f"slot {slot} does not run {task}")
+        now = self.clock()
+        elapsed = now - st.run_started
+        task.stats.run_time += elapsed
+        task.job.service_time += elapsed
+        self.policy.on_stop(task, slot, now, elapsed, reason)
+        st.running = None
+        st.idle_since = now
+        task.slot = None
+        task.last_slot = slot  # preferred affinity for next time (§4.1)
+        return slot
+
+    def _fill(self, slot_id: int) -> Optional[Task]:
+        """Pick and dispatch the next task for an idle slot."""
+        st = self._slots[slot_id]
+        if st.running is not None:
+            return None
+        task = self.policy.pick(slot_id)
+        if task is None:
+            return None
+        return self._run_on(task, slot_id)
+
+    def _fill_idle_slots(self) -> None:
+        for sid, st in enumerate(self._slots):
+            if st.running is None:
+                if self._fill(sid) is None and not self.policy.has_ready():
+                    break  # nothing ready for anyone
+
+    def _run_on(self, task: Task, slot_id: int) -> Task:
+        now = self.clock()
+        st = self._slots[slot_id]
+        assert st.running is None, "I1"
+        task.stats.wait_time += now - getattr(task, "_ready_at", now)
+        if task.stats.first_run_at is None:
+            task.stats.first_run_at = now
+        if task.last_slot is not None and task.last_slot != slot_id:
+            task.stats.migrations += 1
+            if self.topology.distance(task.last_slot, slot_id) >= 2:
+                task.stats.cross_domain_migrations += 1
+        task.state = TaskState.RUNNING
+        task.slot = slot_id
+        task.stats.dispatches += 1
+        st.running = task
+        st.run_started = now
+        self._ctx_switch_time += self.ctx_switch_cost
+        self.policy.on_run(task, slot_id, now)
+        self._dispatch_cb(task, slot_id)
+        return task
+
+    # ------------------------------------------------------------------ #
+    # introspection / diagnostics
+    # ------------------------------------------------------------------ #
+    def running_tasks(self) -> list[Optional[Task]]:
+        return [s.running for s in self._slots]
+
+    def idle_slot_ids(self) -> list[int]:
+        return [i for i, s in enumerate(self._slots) if s.running is None]
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            states: dict[str, int] = {}
+            for t in self.all_tasks:
+                states[t.state.value] = states.get(t.state.value, 0) + 1
+            return {
+                "now": self.clock(),
+                "policy": self.policy.name,
+                "slots_busy": self.topology.n_slots - len(self.idle_slot_ids()),
+                "slots": self.topology.n_slots,
+                "task_states": states,
+                "ready": self.policy.ready_count(),
+            }
+
+    def stats(self) -> SchedStats:
+        s = collect(
+            self.all_tasks,
+            makespan=self.clock() - self._started_at,
+            n_slots=self.topology.n_slots,
+        )
+        s.context_switch_time = self._ctx_switch_time
+        return s

@@ -1,0 +1,272 @@
+"""Real-thread USF runtime — the "glibcv" analogue.
+
+Gates genuine Python threads (which dispatch genuine JAX work) through the
+central Scheduler:
+
+* ``create()`` is pthread_create (§4.3.1): the new thread is recruited as a
+  worker, its task is submitted to the scheduler, and it *parks* until
+  dispatched to a slot — freshly created threads never run freely.
+* ``join()`` is masked (§4.3.1): the completed worker parks in the thread
+  cache; subsequent ``create()`` calls reuse the most recent cached worker
+  (Dice & Kogan), avoiding create/destroy cost (the 4x win of Table 2's
+  pth rows).
+* Blocking primitives in ``repro.core.sync`` call ``pause()`` /
+  ``ready()`` — the nosv_pause / nosv_submit analogues.
+* ``gating=False`` turns the runtime into the *Linux baseline*: threads run
+  free (oversubscribed), synchronization falls back to plain threading —
+  the OS scheduler multiplexes.
+
+TLS: a task runs its whole life on one worker thread (tasks migrate between
+*slots*, never between threads), so ``threading.local`` written inside a
+task is stable across block/resume — the paper's seamlessness claim,
+verified in tests/test_threads.py. Worker reuse gives a *new* task a fresh
+``task_local()`` dict (pthread_create semantics).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+from repro.core.policies.base import Policy
+from repro.core.scheduler import Scheduler
+from repro.core.task import Job, Task, TaskState
+from repro.core.topology import Topology
+
+
+class UsfError(RuntimeError):
+    pass
+
+
+class _Worker:
+    """A cached OS thread that serves one task at a time."""
+
+    __slots__ = ("thread", "inbox", "name", "_sem")
+
+    def __init__(self, runtime: "UsfRuntime", idx: int):
+        self.name = f"usf-worker-{idx}"
+        self.inbox: "deque[Optional[Task]]" = deque()
+        self._sem = threading.Semaphore(0)
+        self.thread = threading.Thread(
+            target=runtime._worker_main, args=(self,), name=self.name, daemon=True
+        )
+        self.thread.start()
+
+    def assign(self, task: Optional[Task]) -> None:
+        self.inbox.append(task)
+        self._sem.release()
+
+    def take(self) -> Optional[Task]:
+        self._sem.acquire()
+        return self.inbox.popleft()
+
+
+class UsfRuntime:
+    """One per node — the shared nOS-V instance analogue (multi-job)."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        policy: Policy,
+        *,
+        gating: bool = True,
+        thread_cache: bool = True,
+    ):
+        self.topology = topology
+        self.gating = gating
+        self.thread_cache_enabled = thread_cache
+        self._tls = threading.local()
+        self._cache: deque[_Worker] = deque()
+        self._all_workers: list[_Worker] = []
+        self._cache_lock = threading.Lock()
+        self._widx = 0
+        self._shutdown = False
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.sched = Scheduler(
+            topology,
+            policy,
+            clock=time.monotonic,
+            dispatch=self._on_dispatch,
+        )
+
+    # ------------------------------------------------------------------ #
+    # pthread-like API
+    # ------------------------------------------------------------------ #
+    def create(
+        self,
+        fn: Callable[..., Any],
+        args: tuple = (),
+        kwargs: Optional[dict] = None,
+        *,
+        job: Job,
+        name: str = "",
+    ) -> Task:
+        """pthread_create: recruit a (new or cached) worker for a new task."""
+        if self._shutdown:
+            raise UsfError("runtime is shut down")
+        task = Task(job, body=(fn, args, kwargs or {}), name=name)
+        task._resume_sem = threading.Semaphore(0)  # type: ignore[attr-defined]
+        task._done_event = threading.Event()  # type: ignore[attr-defined]
+        task._storage = {}  # type: ignore[attr-defined]  # fresh task-locals
+        task.on_done.append(lambda t: t._done_event.set())  # type: ignore[attr-defined]
+        worker = self._get_worker()
+        task._ctx = worker
+        worker.assign(task)
+        return task
+
+    def join(self, task: Task, timeout: Optional[float] = None) -> bool:
+        """pthread_join, masked (§4.3.1): the worker is already parked in the
+        cache; we only wait for task completion. A gated caller blocks
+        cooperatively (releases its slot); an external thread just waits."""
+        cur = self.current_task()
+        ev: threading.Event = task._done_event  # type: ignore[attr-defined]
+        if cur is None or not self.gating:
+            return ev.wait(timeout)
+        # registration must be atomic wrt finish() (which runs on_done under
+        # the scheduler lock), or the wakeup could be lost
+        with self.sched._lock:
+            if task.done:
+                return True
+            task.on_done.append(lambda _t: self.sched.unblock(cur))
+        self.sched.block(cur)
+        self._park(cur)
+        return task.done
+
+    # ------------------------------------------------------------------ #
+    # nOS-V-like blocking API (used by repro.core.sync)
+    # ------------------------------------------------------------------ #
+    def current_task(self) -> Optional[Task]:
+        return getattr(self._tls, "task", None)
+
+    def pause(self) -> None:
+        """nosv_pause: the calling task blocks; its slot swaps in another.
+
+        The caller must have made itself discoverable (e.g. queued itself on
+        a sync object) *before* calling pause — wakeups that race ahead are
+        absorbed by the scheduler's pending-wakeup counter.
+        """
+        task = self._require_task()
+        self.sched.block(task)
+        self._park(task)
+
+    def ready(self, task: Task) -> None:
+        """nosv_submit: mark a paused task ready (queued, not resumed — I3)."""
+        self.sched.unblock(task)
+
+    def yield_now(self) -> None:
+        """sched_yield → nosv_yield: requeue behind peers, maybe resume."""
+        task = self._require_task()
+        self.sched.yield_(task)
+        self._park(task)
+
+    def sleep(self, seconds: float) -> None:
+        """nosv_waitfor: timed block; auto-resubmitted when the timer fires."""
+        task = self._require_task()
+        timer = threading.Timer(seconds, lambda: self.sched.unblock(task))
+        timer.daemon = True
+        timer.start()
+        self.sched.block(task)
+        self._park(task)
+
+    def task_local(self) -> dict:
+        """Per-task storage (fresh per task even on worker reuse)."""
+        return self._require_task()._storage  # type: ignore[attr-defined]
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    def shutdown(self, timeout: float = 10.0) -> None:
+        """Unpark, detach and truly join all cached workers (§4.3.1)."""
+        self._shutdown = True
+        with self._cache_lock:
+            workers = list(self._all_workers)
+            self._cache.clear()
+        for w in workers:
+            w.assign(None)  # poison pill
+        deadline = time.monotonic() + timeout
+        for w in workers:
+            w.thread.join(max(0.0, deadline - time.monotonic()))
+
+    def stats(self) -> dict:
+        s = self.sched.stats().as_dict()
+        s["cache_hits"] = self.cache_hits
+        s["cache_misses"] = self.cache_misses
+        s["workers"] = len(self._all_workers)
+        return s
+
+    # ------------------------------------------------------------------ #
+    # internals
+    # ------------------------------------------------------------------ #
+    def _require_task(self) -> Task:
+        t = self.current_task()
+        if t is None:
+            raise UsfError("not inside a USF task")
+        return t
+
+    def _get_worker(self) -> _Worker:
+        with self._cache_lock:
+            if self.thread_cache_enabled and self._cache:
+                self.cache_hits += 1
+                return self._cache.pop()  # most recent first (warm)
+            self.cache_misses += 1
+            w = _Worker(self, self._widx)
+            self._widx += 1
+            self._all_workers.append(w)
+            return w
+
+    def _park(self, task: Task) -> None:
+        """Wait until the scheduler dispatches ``task`` to a slot again."""
+        task._resume_sem.acquire()  # type: ignore[attr-defined]
+
+    def _on_dispatch(self, task: Task, slot_id: int) -> None:
+        task._resume_sem.release()  # type: ignore[attr-defined]
+
+    def _worker_main(self, worker: _Worker) -> None:
+        while True:
+            task = worker.take()
+            if task is None:
+                return  # detached at shutdown
+            self._tls.task = task
+            try:
+                fn, args, kwargs = task.body
+                if self.gating:
+                    # nosv_attach: submit + park until first dispatch
+                    self.sched.submit(task)
+                    self._park(task)
+                    try:
+                        fn(*args, **kwargs)
+                    finally:
+                        self.sched.finish(task)
+                else:
+                    # free-running Linux-baseline mode
+                    self.sched.register_job(task.job)
+                    task.state = TaskState.RUNNING
+                    now = time.monotonic()
+                    task.stats.created_at = task.stats.created_at or now
+                    task.stats.first_run_at = now
+                    try:
+                        fn(*args, **kwargs)
+                    finally:
+                        task.state = TaskState.DONE
+                        task.stats.done_at = time.monotonic()
+                        for cb in task.on_done:
+                            cb(task)
+            except Exception:  # pragma: no cover - surfaced via task.exc
+                import traceback
+
+                task._exc = traceback.format_exc()  # type: ignore[attr-defined]
+                if not getattr(task, "_done_event", None) or not task._done_event.is_set():  # type: ignore[attr-defined]
+                    task._done_event.set()  # type: ignore[attr-defined]
+            finally:
+                self._tls.task = None
+                if not self._shutdown:
+                    with self._cache_lock:
+                        if self.thread_cache_enabled:
+                            self._cache.append(worker)
+                        else:
+                            self._all_workers.remove(worker)
+                    if not self.thread_cache_enabled:
+                        return  # thread truly exits (pth-style create/destroy)

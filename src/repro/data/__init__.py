@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMDataset, PrefetchLoader
+
+__all__ = ["SyntheticLMDataset", "PrefetchLoader"]

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every kernel (the ground truth for allclose tests).
+
+Deliberately naive: materialized score matrices, O(S) step-by-step
+recurrences — slow, obvious, and independent of the kernel algebra.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1.0e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window: Optional[int] = None):
+    """q [B,H,S,D]; k,v [B,KV,T,D] -> [B,H,S,D]."""
+    B, H, S, D = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, S, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qr, k.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def flash_decode_ref(q, k_cache, v_cache, cache_pos, q_pos, *,
+                     window: Optional[int] = None):
+    """q [B,H,D]; caches [B,KV,W,D]; cache_pos [B,W]; q_pos [B]."""
+    B, H, D = q.shape
+    KV, W = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bkwd->bkgw", qr, k_cache.astype(jnp.float32))
+    valid = (cache_pos >= 0) & (cache_pos <= q_pos[:, None])
+    if window is not None:
+        valid &= q_pos[:, None] - cache_pos < window
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    o = jnp.einsum("bkgw,bkwd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Exact O(S) recurrence. x [B,S,H,P]; dt [B,S,H]; A [H];
+    Bm, Cm [B,S,N]. Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, t):
+        xt, dtt, Bt, Ct = t
+        a = jnp.exp(dtt.astype(jnp.float32) * A)           # [B,H]
+        h = h * a[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt.astype(jnp.float32),
+            Bt.astype(jnp.float32), xt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bn,bhpn->bhp", Ct.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def rglru_ref(a, b, h0):
+    """Exact step recurrence. a,b [B,S,W]; h0 [B,W]."""
+    def step(h, t):
+        at, bt = t
+        h = at.astype(jnp.float32) * h + bt.astype(jnp.float32)
+        return h, h
+
+    h, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)),
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(a.dtype), h
+
+
+def moe_gmm_ref(x, w):
+    """x [E,C,D]; w [E,D,F]."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

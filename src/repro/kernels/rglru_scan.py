@@ -1,0 +1,85 @@
+"""RG-LRU linear-recurrence kernel: h_t = a_t * h_{t-1} + b_t.
+
+Memory-bound elementwise scan. Grid (batch, width_blocks, seq_blocks) with
+the seq axis sequential-minor; the [blk_w] hidden state lives in VMEM
+scratch across seq iterations, and each iteration runs a short fori_loop
+over its seq tile. Gates (a, b) are computed outside in JAX (they're
+matmuls that XLA already fuses well); the kernel is the part XLA does
+badly — a length-S sequential dependence that would otherwise lower to S
+tiny HLO ops or an O(S log S) associative scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _kernel(a_ref, b_ref, h0_ref, y_ref, hout_ref, h_scr, *, blk_s: int):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)   # [blk_s, blk_w]
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        h = carry
+        h = a[t] * h + b[t]
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, blk_s, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(si == ns - 1)
+    def _fin():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def rglru_scan_kernel(
+    a: jax.Array,    # [B, S, W] decay in (0,1)
+    b: jax.Array,    # [B, S, W] gated input
+    h0: jax.Array,   # [B, W]
+    *,
+    blk_w: int = 128,
+    blk_s: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, S, W = a.shape
+    blk_w = min(blk_w, W)
+    blk_s = min(blk_s, S)
+    assert W % blk_w == 0 and S % blk_s == 0, (W, blk_w, S, blk_s)
+
+    y, hN = pl.pallas_call(
+        functools.partial(_kernel, blk_s=blk_s),
+        grid=(B, W // blk_w, S // blk_s),
+        in_specs=[
+            pl.BlockSpec((1, blk_s, blk_w), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, blk_s, blk_w), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, blk_w), lambda bi, wi, si: (bi, wi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_s, blk_w), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, blk_w), lambda bi, wi, si: (bi, wi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), a.dtype),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((blk_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y, hN

@@ -1,0 +1,116 @@
+"""Mamba-2 SSD chunked-scan kernel.
+
+Grid (batch, head, chunk): the chunk axis is the sequential minor grid
+dimension, carrying the [P, N] recurrent state in VMEM scratch. Each chunk
+iteration does three MXU matmuls (C.B^T scores, score @ x, outer-product
+state update) plus elementwise decay math — the same algebra as
+models/mamba2.ssd_chunked (the ref oracle uses the O(S) recurrence).
+
+VMEM per iteration: x,y [Q,P] + B,C [Q,N] + state [P,N] — a few hundred KB
+at (Q=256, P=64, N=128); the MXU dims (Q, P, N) are all 128-aligned or
+padded by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_scr,
+            *, Q: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)            # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)          # [Q]
+    A = a_ref[0].astype(jnp.float32)               # [] scalar (per head)
+    Bm = b_ref[0].astype(jnp.float32)              # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)              # [Q, N]
+
+    dA = dt * A                                    # [Q], negative
+    cum = jnp.cumsum(dA)                           # [Q]
+    # intra-chunk: scores_ij = (C_i . B_j) exp(cum_i - cum_j) dt_j, i >= j
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.exp(jnp.clip(cum[:, None] - cum[None, :], -60.0, 0.0))
+    scores = jnp.where(ii >= jj, CB * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [Q, P]
+    # cross-chunk: y_i += exp(cum_i) C_i . h
+    h = h_scr[...]                                  # [P, N]
+    Ch = jax.lax.dot_general(Cm, h, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, P]
+    y = y + Ch * jnp.exp(jnp.clip(cum, -60.0, 0.0))[:, None]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state update: h' = exp(cum_Q) h + sum_j exp(cum_Q - cum_j) dt_j x_j B_j^T
+    last = cum[Q - 1]
+    w = jnp.exp(jnp.clip(last - cum, -60.0, 0.0)) * dt   # [Q]
+    h_new = jnp.exp(jnp.clip(last, -60.0, 0.0)) * h + jax.lax.dot_general(
+        x * w[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # [P, N]
+    h_scr[...] = h_new
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,    # [B, S, H, P]
+    dt: jax.Array,   # [B, S, H] (>0)
+    A: jax.Array,    # [H] (<0)
+    Bm: jax.Array,   # [B, S, N]
+    Cm: jax.Array,   # [B, S, N]
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    # kernel layouts: x [B,H,S,P], dt [B,H,S], B/C [B,S,N] shared over heads
+    xk = jnp.moveaxis(x, 2, 1)
+    dtk = jnp.moveaxis(dt, 2, 1)
+
+    y, h = pl.pallas_call(
+        functools.partial(_kernel, Q=Q),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xk, dtk, A, Bm, Cm)
+    return jnp.moveaxis(y, 1, 2), h

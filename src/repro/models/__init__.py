@@ -1,0 +1,3 @@
+from repro.models.base import ParamSpec, init_tree, abstract_tree, axes_tree
+
+__all__ = ["ParamSpec", "init_tree", "abstract_tree", "axes_tree"]

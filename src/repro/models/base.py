@@ -1,0 +1,119 @@
+"""Module-lite parameter system: pure-JAX, no flax.
+
+A model is (param_specs(cfg) -> spec tree, apply fns). ``ParamSpec`` holds
+shape + *logical axes* + initializer; trees of specs convert to:
+
+* real parameters (``init_tree``) for smoke tests / the 100M example,
+* ShapeDtypeStructs (``abstract_tree``) for the dry-run (no allocation),
+* logical-axes trees (``axes_tree``) that the Sharder resolves to
+  NamedShardings for pjit in/out shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"          # zeros | ones | normal | fan_in | embed
+    scale: Optional[float] = None  # stddev override
+    dtype: Optional[str] = None    # override the model param dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"spec rank mismatch: {self.shape} vs {self.axes}")
+
+    def stacked(self, n: int, axis_name: str = "layers") -> "ParamSpec":
+        """Add a leading scan dimension (stacked per-layer params)."""
+        return ParamSpec(
+            (n, *self.shape), (axis_name, *self.axes), self.init, self.scale, self.dtype
+        )
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _resolve_dtype(spec: ParamSpec, default: str) -> jnp.dtype:
+    return jnp.dtype(spec.dtype or default)
+
+
+def _initializer(spec: ParamSpec) -> Callable[[jax.Array, tuple, Any], jax.Array]:
+    kind = spec.init
+
+    def init(key, shape, dtype):
+        if kind == "zeros":
+            return jnp.zeros(shape, dtype)
+        if kind == "ones":
+            return jnp.ones(shape, dtype)
+        if kind == "const":
+            return jnp.full(shape, spec.scale, dtype)
+        if kind == "normal":
+            std = spec.scale if spec.scale is not None else 0.02
+            return (jax.random.normal(key, shape) * std).astype(dtype)
+        if kind == "fan_in":
+            # truncated-normal-ish scaled by 1/sqrt(fan_in); fan_in = prod of
+            # all dims but the last (after any leading stack dims handled by
+            # caller order: [..., in, out])
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = (spec.scale or 1.0) / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(key, shape) * std).astype(dtype)
+        if kind == "embed":
+            std = spec.scale if spec.scale is not None else 1.0
+            return (jax.random.normal(key, shape) * std).astype(dtype)
+        raise ValueError(f"unknown init {kind}")
+
+    return init
+
+
+def init_tree(key: jax.Array, specs: Any, param_dtype: str = "float32") -> Any:
+    """Materialize real parameters (smoke tests, the 100M example)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        dtype = _resolve_dtype(spec, param_dtype)
+        out.append(_initializer(spec)(k, spec.shape, dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_tree(specs: Any, param_dtype: str = "float32") -> Any:
+    """ShapeDtypeStruct stand-ins for the dry-run (no device allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, _resolve_dtype(s, param_dtype)),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def axes_tree(specs: Any) -> Any:
+    """The logical-axes tree mirroring the param tree."""
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def shardings_tree(specs: Any, sharder, param_dtype: str = "float32") -> Any:
+    """NamedShardings mirroring the param tree (for jit in/out_shardings)."""
+    return jax.tree_util.tree_map(
+        lambda s: sharder.sharding(s.shape, s.axes), specs, is_leaf=is_spec
+    )
+
+
+def param_count(specs: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def param_bytes(specs: Any, param_dtype: str = "float32") -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(
+        math.prod(s.shape) * jnp.dtype(_resolve_dtype(s, param_dtype)).itemsize
+        for s in leaves
+    )

@@ -1,0 +1,200 @@
+"""Mamba-2 (SSD — state-space duality) mixer block [arXiv:2405.21060].
+
+TPU adaptation notes (DESIGN.md §2):
+* The chunked SSD algorithm maps naturally to the MXU: intra-chunk terms are
+  (Q x Q) matmuls, inter-chunk terms are small state GEMMs, chained by a
+  ``lax.scan`` carrying the [B, H, P, N] state. The Pallas kernel
+  (kernels/ssd_scan.py) implements the same chunk body with VMEM tiling.
+* We convolve only the x-branch (not xBC concatenated) so the depthwise conv
+  channel dim stays cleanly sharded over the model axis; B/C are small
+  (n_groups=1) and stay replicated.
+
+Recurrence (per head h, discretized):
+    a_t = exp(dt_t * A)                 (A < 0)
+    h_t = a_t * h_{t-1} + dt_t * B_t x_t^T
+    y_t = C_t . h_t + D * x_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamSpec
+from repro.models.layers import rmsnorm
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_inner, nh, hd, ds = _dims(cfg)
+    k = cfg.ssm_conv
+    return {
+        "wz": ParamSpec((d, d_inner), ("embed", "mlp"), init="fan_in"),
+        "wx": ParamSpec((d, d_inner), ("embed", "mlp"), init="fan_in"),
+        "wB": ParamSpec((d, ds), ("embed", "state"), init="fan_in"),
+        "wC": ParamSpec((d, ds), ("embed", "state"), init="fan_in"),
+        "wdt": ParamSpec((d, nh), ("embed", "ssm_heads"), init="fan_in"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "conv_w": ParamSpec((k, d_inner), ("conv", "mlp"), init="normal",
+                            scale=0.1),
+        "conv_b": ParamSpec((d_inner,), ("mlp",), init="zeros"),
+        "norm": ParamSpec((d_inner,), ("mlp",), init="ones"),
+        "wo": ParamSpec((d_inner, d), ("mlp", "embed"), init="fan_in"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq. x [B,S,Ci], w [K,Ci]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K=4: unrolled taps (elementwise FMAs)
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk, h0=None):
+    """Chunked SSD scan.
+
+    x [B,S,H,P]; dt [B,S,H] (>0); A [H] (<0); Bm, Cm [B,S,N] (n_groups=1).
+    Returns y [B,S,H,P] and final state [B,H,P,N].
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xc = jnp.moveaxis(x.reshape(Bsz, nc, Q, H, P), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, Q, H), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bsz, nc, Q, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(Bsz, nc, Q, N), 1, 0)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))  # i >= j
+
+    def body(h, xs):
+        xq, dtq, Bq, Cq = xs  # [B,Q,H,P], [B,Q,H], [B,Q,N], [B,Q,N]
+        xq32 = xq.astype(jnp.float32)
+        dA = dtq.astype(jnp.float32) * A  # [B,Q,H], negative
+        cum = jnp.cumsum(dA, axis=1)      # [B,Q,H]
+        # intra-chunk: scores_ij = (C_i.B_j) * exp(cum_i - cum_j) * dt_j
+        CB = jnp.einsum("bin,bjn->bij", Cq.astype(jnp.float32),
+                        Bq.astype(jnp.float32))            # [B,Q,Q]
+        decay = jnp.exp(
+            jnp.clip(cum[:, :, None, :] - cum[:, None, :, :], -60.0, 0.0)
+        )                                                   # [B,Q,Q,H]
+        scores = CB[..., None] * decay * dtq[:, None, :, :]
+        scores = jnp.where(tri[None, :, :, None], scores, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xq32)
+        # cross-chunk: y_i += exp(cum_i) * C_i . h_in
+        Ch = jnp.einsum("bin,bhpn->bihp", Cq.astype(jnp.float32), h)
+        y_cross = Ch * jnp.exp(cum)[..., None].transpose(0, 1, 2, 3)
+        # state update: h' = exp(cum_Q) h + sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+        last = cum[:, -1:, :]                               # [B,1,H]
+        w = jnp.exp(jnp.clip(last - cum, -60.0, 0.0)) * dtq  # [B,Q,H]
+        h_new = (
+            jnp.exp(last[:, 0])[:, :, None, None] * h
+            + jnp.einsum("bjh,bjn,bjhp->bhpn", w, Bq.astype(jnp.float32), xq32)
+        )
+        return h_new, (y_intra + y_cross).astype(x.dtype)
+
+    h_final, yc = jax.lax.scan(body, h0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def mamba2_block(params: dict, cfg, sharder, x: jax.Array,
+                 h0=None, conv_state=None, *, return_state: bool = False):
+    """Full-sequence mixer. x [B,S,d] -> y [B,S,d] (+states if asked)."""
+    dt_ = x.dtype
+    d_inner, nh, hd, ds = _dims(cfg)
+    B, S, _ = x.shape
+
+    z = jnp.einsum("bsd,di->bsi", x, params["wz"].astype(dt_))
+    xi = jnp.einsum("bsd,di->bsi", x, params["wx"].astype(dt_))
+    xi = sharder.constrain(xi, "act_batch", None, "act_mlp")
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["wB"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["wC"].astype(dt_))
+    dtv = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(dt_)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )
+
+    if conv_state is not None:  # prefill continuation — not used in v1
+        raise NotImplementedError
+    xi = _causal_conv(xi, params["conv_w"].astype(dt_),
+                      params["conv_b"].astype(dt_))
+    xi = jax.nn.silu(xi)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, S, nh, hd)
+    y, h_final = ssd_chunked(xh, dtv, A, Bm, Cm, cfg.ssm_chunk, h0)
+    y = y + xh * params["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    # gated RMSNorm (mamba2): norm(y) * silu(z)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["wo"].astype(dt_))
+    if return_state:
+        return out, h_final
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+def mamba2_cache_specs(cfg, batch: int) -> dict:
+    d_inner, nh, hd, ds = _dims(cfg)
+    k = cfg.ssm_conv
+    return {
+        "h": ParamSpec((batch, nh, hd, ds), ("kv_batch", "ssm_heads", None, None),
+                       init="zeros", dtype="float32"),
+        "conv": ParamSpec((batch, k - 1, d_inner), ("kv_batch", None, "mlp"),
+                          init="zeros", dtype=cfg.compute_dtype),
+    }
+
+
+def mamba2_decode(params: dict, cfg, sharder, x: jax.Array, cache: dict):
+    """Single-token step. x [B,1,d] -> (y [B,1,d], new cache)."""
+    dt_ = x.dtype
+    d_inner, nh, hd, ds = _dims(cfg)
+    B = x.shape[0]
+
+    z = jnp.einsum("bsd,di->bsi", x, params["wz"].astype(dt_))[:, 0]
+    xi = jnp.einsum("bsd,di->bsi", x, params["wx"].astype(dt_))[:, 0]
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["wB"].astype(dt_))[:, 0]
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["wC"].astype(dt_))[:, 0]
+    dtv = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(dt_))[:, 0]
+        .astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # [B,H]
+
+    # causal conv against the rolling buffer
+    conv_in = jnp.concatenate([cache["conv"], xi[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"].astype(dt_)  # [K, Ci]
+    conv_out = jnp.einsum("bki,ki->bi", conv_in.astype(dt_), w) + params["conv_b"].astype(dt_)
+    xi = jax.nn.silu(conv_out)
+    new_conv = conv_in[:, 1:, :]
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, nh, hd).astype(jnp.float32)
+    a = jnp.exp(dtv * A)  # [B,H]
+    h = cache["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtv, Bm.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, d_inner).astype(dt_)
+    y = rmsnorm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, params["wo"].astype(dt_))[:, None, :]
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,160 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel, with head-block-diagonal gates):
+    r_t = sigmoid(W_a . x_t)        recurrence gate
+    i_t = sigmoid(W_x . x_t)        input gate
+    a_t = exp(c * r_t * log(sigmoid(Lambda)))          (0 < a_t < 1, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Full-sequence evaluation uses ``lax.associative_scan`` over (a, b) pairs —
+O(S log S) elementwise work, fully parallel, no sequential bottleneck on
+the MXU-free part of the chip. The decode path is the O(1) recurrence.
+
+The Griffin *recurrent block* wraps the RG-LRU with: linear-in, causal
+depthwise conv (k=4), and a gated (GeLU) side branch, then linear-out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamSpec
+
+_C = 8.0
+
+
+def _heads(cfg):
+    width = cfg.lru_width or cfg.d_model
+    nh = cfg.n_heads
+    assert width % nh == 0
+    return width, nh, width // nh
+
+
+def rglru_specs(cfg) -> dict:
+    d = cfg.d_model
+    width, nh, hd = _heads(cfg)
+    k = cfg.ssm_conv
+    return {
+        "w_in": ParamSpec((d, width), ("embed", "lru"), init="fan_in"),
+        "w_gate_branch": ParamSpec((d, width), ("embed", "lru"), init="fan_in"),
+        "conv_w": ParamSpec((k, width), ("conv", "lru"), init="normal", scale=0.1),
+        "conv_b": ParamSpec((width,), ("lru",), init="zeros"),
+        # block-diagonal (per-head) gate projections
+        "wa": ParamSpec((nh, hd, hd), ("heads", None, None), init="fan_in"),
+        "ba": ParamSpec((nh, hd), ("heads", None), init="zeros"),
+        "wx": ParamSpec((nh, hd, hd), ("heads", None, None), init="fan_in"),
+        "bx": ParamSpec((nh, hd), ("heads", None), init="zeros"),
+        "lam": ParamSpec((width,), ("lru",), init="normal", scale=0.5),
+        "w_out": ParamSpec((width, d), ("lru", "embed"), init="fan_in"),
+    }
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _gates(params, xh):
+    """xh [B,S,H,hd] -> (a_t [B,S,H,hd] in (0,1), gated input)."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("bshp,hpq->bshq", xh, params["wa"].astype(xh.dtype))
+        + params["ba"].astype(xh.dtype)
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bshp,hpq->bshq", xh, params["wx"].astype(xh.dtype))
+        + params["bx"].astype(xh.dtype)
+    )
+    return r.astype(jnp.float32), i.astype(jnp.float32)
+
+
+def rglru_scan(params, cfg, x, h0=None):
+    """x [B,S,W] -> (y [B,S,W], h_final [B,W]). fp32 recurrence."""
+    B, S, W = x.shape
+    width, nh, hd = _heads(cfg)
+    xh = x.reshape(B, S, nh, hd)
+    r, i = _gates(params, xh)
+    lam = params["lam"].astype(jnp.float32).reshape(nh, hd)
+    log_a_base = jax.nn.log_sigmoid(lam)  # log(sigmoid(Lambda)) < 0
+    log_a = _C * r * log_a_base           # [B,S,H,hd]
+    a = jnp.exp(log_a)
+    gated = i * xh.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if h0 is not None:
+        # fold h0 into the first step: h_1 = a_1 h0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.reshape(B, nh, hd))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.reshape(B, S, W).astype(x.dtype)
+    return y, h[:, -1].reshape(B, W)
+
+
+def rglru_block(params: dict, cfg, sharder, x: jax.Array,
+                h0=None, *, return_state: bool = False):
+    """Griffin recurrent block. x [B,S,d] -> y [B,S,d]."""
+    dt_ = x.dtype
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_in"].astype(dt_))
+    u = sharder.constrain(u, "act_batch", None, "act_mlp")
+    u = _causal_conv(u, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_))
+    y, h_final = rglru_scan(params, cfg, u, h0)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"].astype(dt_))
+    )
+    y = y * gate
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"].astype(dt_))
+    if return_state:
+        return out, h_final
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+def rglru_cache_specs(cfg, batch: int) -> dict:
+    width, _, _ = _heads(cfg)
+    k = cfg.ssm_conv
+    return {
+        "h": ParamSpec((batch, width), ("kv_batch", "lru"), init="zeros",
+                       dtype="float32"),
+        "conv": ParamSpec((batch, k - 1, width), ("kv_batch", None, "lru"),
+                          init="zeros", dtype=cfg.compute_dtype),
+    }
+
+
+def rglru_decode(params: dict, cfg, sharder, x: jax.Array, cache: dict):
+    """x [B,1,d] -> (y [B,1,d], new cache)."""
+    dt_ = x.dtype
+    width, nh, hd = _heads(cfg)
+    B = x.shape[0]
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_in"].astype(dt_))[:, 0]
+    conv_in = jnp.concatenate(
+        [cache["conv"], u[:, None, :].astype(cache["conv"].dtype)], axis=1
+    )
+    w = params["conv_w"].astype(dt_)
+    u = jnp.einsum("bkw,kw->bw", conv_in.astype(dt_), w) + params["conv_b"].astype(dt_)
+    new_conv = conv_in[:, 1:, :]
+
+    uh = u.reshape(B, 1, nh, hd)
+    r, i = _gates(params, uh)
+    lam = params["lam"].astype(jnp.float32).reshape(nh, hd)
+    log_a = _C * r[:, 0] * jax.nn.log_sigmoid(lam)
+    a = jnp.exp(log_a)
+    gated = i[:, 0] * uh[:, 0].astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    h = a * cache["h"].reshape(B, nh, hd) + b
+    y = h.reshape(B, width).astype(dt_)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"].astype(dt_))[:, 0]
+    )
+    out = jnp.einsum("bw,wd->bd", y * gate, params["w_out"].astype(dt_))
+    return out[:, None, :], {"h": h.reshape(B, width), "conv": new_conv}

@@ -1,0 +1,180 @@
+"""Optimizers, pure JAX, param-tree generic.
+
+* AdamW — fp32 moments; state mirrors the param tree so it inherits the
+  params' shardings (FSDP-sharded optimizer state for free).
+* Adafactor — factored second moments for >=2D params (rank-1 outer
+  approximation), no first moment; the memory footprint that lets
+  grok-1-314B train on a single 256-chip pod (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------- #
+# AdamW
+# --------------------------------------------------------------------------- #
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads: Any,
+    state: dict,
+    params: Any,
+    *,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> tuple[Any, dict]:
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m2 / (1 - b1 ** c)
+        vhat = v2 / (1 - b2 ** c)
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        p2, m2, v2 = upd(g, m, v, p)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return (
+        jax.tree_util.tree_unflatten(tdef, new_p),
+        {
+            "m": jax.tree_util.tree_unflatten(tdef, new_m),
+            "v": jax.tree_util.tree_unflatten(tdef, new_v),
+            "count": count,
+        },
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (factored, momentum-free)
+# --------------------------------------------------------------------------- #
+def _factored(shape: tuple[int, ...]) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: Any) -> dict:
+    def per_param(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "f": jax.tree_util.tree_map(per_param, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    grads: Any,
+    state: dict,
+    params: Any,
+    *,
+    lr: float | jax.Array,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    chunk_stacked: int = 8,
+) -> tuple[Any, dict]:
+    """``chunk_stacked``: scan the update over the leading (stacked-layers)
+    dim of big params — the fp32 temporaries (g², vhat, u) of an update on
+    a [L, ...] stacked tensor otherwise dominate peak memory (§Perf
+    iteration I5: grok-314B, 64-layer expert stacks)."""
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    beta2 = 1.0 - c ** (-decay)
+
+    def upd(g, f, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if _factored(p.shape):
+            vr = beta2 * f["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * f["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            vhat = (vr / denom)[..., None] * vc[..., None, :]
+            newf = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * f["v"] + (1 - beta2) * g2
+            vhat = v
+            newf = {"v": v}
+        u = g32 / jnp.sqrt(vhat + eps)
+        # update clipping (RMS <= clip_threshold); under the chunked path
+        # this clips per layer slice — the per-tensor semantics of
+        # unstacked frameworks
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        step = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), newf
+
+    def upd_maybe_chunked(g, f, p):
+        if chunk_stacked and p.ndim >= 3 and p.shape[0] >= chunk_stacked:
+            return jax.lax.map(lambda t: upd(*t), (g, f, p))
+        return upd(g, f, p)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_f = tdef.flatten_up_to(state["f"])
+    new_p, new_f = [], []
+    for g, f, p in zip(flat_g, flat_f, flat_p):
+        p2, f2 = upd_maybe_chunked(g, f, p)
+        new_p.append(p2)
+        new_f.append(f2)
+    return (
+        jax.tree_util.tree_unflatten(tdef, new_p),
+        {"f": jax.tree_util.tree_unflatten(tdef, new_f), "count": count},
+    )
+
+
+# --------------------------------------------------------------------------- #
+# factory
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], dict]
+    update: Callable[..., tuple[Any, dict]]
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(
+            "adamw",
+            adamw_init,
+            lambda g, s, p, lr: adamw_update(g, s, p, lr=lr, **kw),
+        )
+    if name == "adafactor":
+        return Optimizer(
+            "adafactor",
+            adafactor_init,
+            lambda g, s, p, lr: adafactor_update(g, s, p, lr=lr, **kw),
+        )
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,3 @@
+from repro.runtime.sharding import Sharder, DEFAULT_RULES, logical_to_spec
+
+__all__ = ["Sharder", "DEFAULT_RULES", "logical_to_spec"]

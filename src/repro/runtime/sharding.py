@@ -1,0 +1,162 @@
+"""Logical-axis sharding rules → GSPMD shardings (MaxText-style).
+
+Every parameter and key activation in the model zoo carries *logical* axis
+names ("embed", "heads", "vocab", "act_seq", ...). A rule table maps logical
+axes to preferred mesh axes; ``logical_to_spec`` resolves them against a
+concrete mesh, **auto-dropping** mesh axes that don't divide the dimension
+or are already taken by another dimension of the same tensor.
+
+This single mechanism is what makes all 40 (arch × shape) dry-run cells
+lower cleanly: 8 KV heads on a 16-way model axis degrade to replication,
+batch=1 long-context decode drops its batch sharding, 8 experts on a
+16-way axis fall back to weight-dim sharding, etc., with no per-arch code.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered mesh-axis preference
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "act_batch": ("pod", "data"),
+    "act_seq": ("model",),          # sequence parallelism (Megatron-SP style)
+    "act_embed": (),                 # replicated within a row by default
+    "act_heads": ("model",),        # tensor parallel attention activations
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),        # sharded logits for the softmax/CE
+    "act_experts": ("model",),
+    # parameters
+    "embed": ("data",),              # FSDP-style parameter sharding
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "lru": ("model",),
+    "head_dim": (),
+    "state": (),
+    "conv": (),
+    "layers": (),                    # scan dim: never sharded
+    # kv-cache
+    "kv_batch": ("pod", "data"),
+    "kv_seq": ("model",),           # flash-decode style split-KV
+}
+
+
+def logical_to_spec(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Mapping[str, tuple[str, ...]]] = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec for ``mesh``.
+
+    Drops (a) mesh axes not present in the mesh, (b) axes already used by
+    another dim of this tensor, (c) axes whose size doesn't divide the dim.
+    """
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} vs axes {axes} rank mismatch")
+    rules = rules or DEFAULT_RULES
+    used: set[str] = set()
+    parts: list[Any] = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            parts.append(None)
+            continue
+        keep: list[str] = []
+        prod = 1
+        for m in rules.get(ax, ()):
+            size = mesh.shape.get(m)
+            if size is None or m in used:
+                continue
+            if dim % (prod * size) == 0:
+                keep.append(m)
+                prod *= size
+        used.update(keep)
+        if not keep:
+            parts.append(None)
+        elif len(keep) == 1:
+            parts.append(keep[0])
+        else:
+            parts.append(tuple(keep))
+    # trim trailing Nones (cosmetic)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+class Sharder:
+    """Carries (mesh, rules) through model code; no-op when mesh is None.
+
+    ``constrain(x, *axes)`` places with_sharding_constraint on key
+    activations; ``param_shardings(specs)`` builds NamedShardings for a
+    ParamSpec tree (see models/base.py).
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 rules: Optional[Mapping[str, tuple[str, ...]]] = None,
+                 *, fsdp_gather: bool = False):
+        self.mesh = mesh
+        self.rules = dict(rules or DEFAULT_RULES)
+        #: when True, ``gather()`` constrains layer weights to drop their
+        #: FSDP ("embed") sharding at use time — explicit ZeRO-3-style
+        #: per-layer all-gather, which keeps backward activation shardings
+        #: on the model axis (see EXPERIMENTS.md §Perf iteration D).
+        self.fsdp_gather = fsdp_gather
+        #: when True, ``sp_boundary()`` emits explicit bf16 seq all-gathers
+        #: at attention/MLP entries (Megatron-SP; §Perf iteration E).
+        self.explicit_sp = False
+
+    def with_rules(self, overrides: Mapping[str, tuple[str, ...]]) -> "Sharder":
+        r = dict(self.rules)
+        r.update(overrides)
+        return Sharder(self.mesh, r, fsdp_gather=self.fsdp_gather)
+
+    def spec(self, shape: Sequence[int], axes: Sequence[Optional[str]]) -> P:
+        if self.mesh is None:
+            return P()
+        return logical_to_spec(shape, axes, self.mesh, self.rules)
+
+    def sharding(self, shape: Sequence[int], axes: Sequence[Optional[str]]):
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    def constrain(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = self.spec(x.shape, axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    def sp_boundary(self, x: jax.Array) -> jax.Array:
+        """Explicit Megatron-SP boundary: all-gather the sequence dim (in
+        the model's COMPUTE dtype, before any XLA-internal f32 upcast of
+        dot operands) on entry to attention/MLP. The transpose of this
+        constraint reduce-scatters the bf16 cotangent. No-op unless
+        ``explicit_sp``. See EXPERIMENTS.md §Perf iteration E."""
+        if self.mesh is None or not self.explicit_sp:
+            return x
+        axes = ("act_batch",) + (None,) * (x.ndim - 1)
+        return self.constrain(x, *axes)
+
+    def gather(self, w: jax.Array, *axes: Optional[str]) -> jax.Array:
+        """FSDP use-time weight gather: same spec as ``constrain`` but with
+        the "embed" (FSDP) axis replicated. No-op unless fsdp_gather."""
+        if self.mesh is None or not self.fsdp_gather:
+            return w
+        rules = dict(self.rules)
+        rules["embed"] = ()
+        spec = logical_to_spec(w.shape, axes, self.mesh, rules)
+        return jax.lax.with_sharding_constraint(
+            w, NamedSharding(self.mesh, spec)
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Sharder(mesh={None if self.mesh is None else dict(self.mesh.shape)})"

@@ -1,0 +1,3 @@
+from repro.serve.engine import InferenceServer, Gateway, Request
+
+__all__ = ["InferenceServer", "Gateway", "Request"]

@@ -1,0 +1,4 @@
+from repro.train.loss import lm_loss
+from repro.train.step import make_train_step, make_eval_step, init_train_state
+
+__all__ = ["lm_loss", "make_train_step", "make_eval_step", "init_train_state"]

@@ -1,0 +1,31 @@
+"""Losses. Vocab-sharded-safe: logsumexp/gather over the sharded vocab dim
+lower to local reductions + small all-reduces under GSPMD (never a [T, V]
+one-hot)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0,
+            ignore_id: int = -1) -> tuple[jax.Array, dict]:
+    """Token-mean cross entropy. logits [B,S,V]; labels [B,S] int32."""
+    l32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(l32, axis=-1)                       # [B,S]
+    safe_labels = jnp.maximum(labels, 0)
+    ll = jnp.take_along_axis(l32, safe_labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels != ignore_id).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    metrics = {
+        "ce_loss": loss,
+        "tokens": denom,
+        "accuracy": ((l32.argmax(-1) == labels) * mask).sum() / denom,
+    }
+    if z_loss:
+        zl = z_loss * ((lse ** 2) * mask).sum() / denom
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    return loss, metrics

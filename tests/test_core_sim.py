@@ -1,0 +1,412 @@
+"""Behavioural tests for the USF discrete-event executor + policies.
+
+These encode the paper's scheduling semantics:
+  * SCHED_COOP never preempts; swaps happen at blocking points only.
+  * Unblocked tasks are queued, not resumed immediately.
+  * Busy-wait barriers livelock cooperative policies when waiters > slots
+    (§4.4) unless the yield adaptation is applied (§5.2); preemptive
+    policies mask the deadlock into a performance problem.
+  * LHP: preemption of a lock holder stalls the FIFO queue — SCHED_COOP
+    avoids it.
+"""
+
+import pytest
+
+from repro.core import simtask as st
+from repro.core.events import SimDeadlock, SimExecutor, SimLivelock
+from repro.core.policies import SchedCoop, SchedFair, SchedRR
+from repro.core.task import Job
+from repro.core.topology import Topology
+
+
+def make_sim(n_slots=4, policy=None, domains=1, **kw):
+    topo = Topology(n_slots, domains)
+    return SimExecutor(topo, policy or SchedCoop(), **kw)
+
+
+def test_compute_tasks_all_complete_and_makespan():
+    sim = make_sim(n_slots=2)
+    job = Job("j")
+
+    def body():
+        yield st.compute(1.0)
+
+    tasks = [sim.spawn(job, body, name=f"t{i}") for i in range(6)]
+    stats = sim.run()
+    assert all(t.done for t in tasks)
+    assert stats.tasks_completed == 6
+    # 6 x 1s tasks on 2 slots ~ 3s (+ small switch costs)
+    assert 3.0 <= stats.makespan < 3.1
+    assert stats.preemptions == 0  # I2: SCHED_COOP never preempts
+
+
+def test_oversubscription_gated_to_slots():
+    """More ready tasks than slots: at most n_slots run concurrently."""
+    sim = make_sim(n_slots=3)
+    job = Job("j")
+    running = {"cur": 0, "max": 0}
+
+    def body():
+        running["cur"] += 1
+        running["max"] = max(running["max"], running["cur"])
+        yield st.compute(0.5)
+        running["cur"] -= 1
+
+    for i in range(12):
+        sim.spawn(job, body)
+    sim.run()
+    assert running["max"] <= 3
+
+
+def test_mutex_fifo_handoff_order():
+    """Listing 1: unlock hands the mutex to waiters in FIFO order."""
+    sim = make_sim(n_slots=8)
+    job = Job("j")
+    m = st.SimMutex()
+    order = []
+
+    def body(i):
+        def gen():
+            yield st.compute(0.001 * (i + 1))  # stagger arrivals
+            yield st.lock(m)
+            order.append(i)
+            yield st.compute(0.01)
+            yield st.unlock(m)
+
+        return gen
+
+    for i in range(6):
+        sim.spawn(job, body(i))
+    sim.run()
+    assert order == sorted(order)
+
+
+def test_unblocked_tasks_are_queued_not_resumed():
+    """I3: an unblock with no idle slot leaves the task READY (queued)."""
+    sim = make_sim(n_slots=1)
+    job = Job("j")
+    m = st.SimMutex()
+    trace = []
+
+    def holder():
+        yield st.lock(m)
+        yield st.compute(0.1)
+        yield st.unlock(m)
+        trace.append("holder-released")
+        yield st.compute(0.5)  # keeps the only slot busy after unlock
+        trace.append("holder-done")
+
+    def waiter():
+        yield st.compute(0.001)
+        yield st.lock(m)
+        trace.append("waiter-got-lock")
+        yield st.unlock(m)
+
+    sim.spawn(job, holder)
+    sim.spawn(job, waiter)
+    sim.run()
+    # waiter got the mutex by transfer but only *ran* after holder's slot
+    # freed up: holder-done precedes waiter-got-lock in wall order? No —
+    # waiter runs when holder *finishes* (cooperative, 1 slot).
+    assert trace == ["holder-released", "holder-done", "waiter-got-lock"]
+
+
+def test_cooperative_barrier():
+    sim = make_sim(n_slots=4)
+    job = Job("j")
+    b = st.SimBarrier(4)
+    done_at = {}
+
+    def body(i):
+        def gen():
+            yield st.compute(0.1 * (i + 1))  # imbalanced phases
+            yield st.barrier_wait(b)
+            done_at[i] = sim.now()
+
+        return gen
+
+    for i in range(4):
+        sim.spawn(job, body(i))
+    sim.run()
+    assert len(done_at) == 4
+    times = list(done_at.values())
+    assert max(times) - min(times) < 0.02  # all released together
+
+
+def test_spin_barrier_livelock_without_yield():
+    """§4.4: waiters exceed slots + pure busy-wait + cooperative policy
+    = livelock. The engine must detect it, not spin forever."""
+    sim = make_sim(n_slots=2, max_time=5.0)
+    job = Job("j")
+    b = st.SimSpinBarrier(3, yield_every=None)  # unmodified library
+
+    def body():
+        yield st.compute(0.01)
+        yield st.spin_barrier_wait(b)
+
+    for _ in range(3):
+        sim.spawn(job, body)
+    with pytest.raises(SimLivelock):
+        sim.run()
+
+
+def test_spin_barrier_yield_adaptation_fixes_livelock():
+    """§5.2: one-line yield adaptation makes the same case complete."""
+    sim = make_sim(n_slots=2, max_time=5.0)
+    job = Job("j")
+    b = st.SimSpinBarrier(3, yield_every=4)
+
+    def body():
+        yield st.compute(0.01)
+        yield st.spin_barrier_wait(b)
+
+    tasks = [sim.spawn(job, body) for _ in range(3)]
+    sim.run()
+    assert all(t.done for t in tasks)
+
+
+def test_preemptive_policy_masks_spin_deadlock_into_slowdown():
+    """§4.4: preemptive schedulers guarantee progress without scheduling
+    points — the same no-yield case completes under SCHED_FAIR."""
+    sim = make_sim(n_slots=2, policy=SchedFair(slice_s=0.005), max_time=30.0)
+    job = Job("j")
+    b = st.SimSpinBarrier(3, yield_every=None)
+
+    def body():
+        yield st.compute(0.01)
+        yield st.spin_barrier_wait(b)
+
+    tasks = [sim.spawn(job, body) for _ in range(3)]
+    stats = sim.run()
+    assert all(t.done for t in tasks)
+    assert stats.preemptions > 0
+    assert stats.total_spin_time > 0.004  # progress was bought with spin waste
+
+
+def test_lock_holder_preemption_hurts_fair_not_coop():
+    """LHP (§1, §6): a lock-hot job co-located with a compute-hog job on an
+    oversubscribed node. Under the preemptive baseline the lock holder gets
+    preempted mid-critical-section by hog threads, stalling the whole FIFO
+    queue; SCHED_COOP lets critical sections run to completion."""
+
+    def workload(sim):
+        lock_job = Job("locky")
+        hog_job = Job("hog")
+        m = st.SimMutex()
+        lock_tasks = []
+
+        def lock_body():
+            def gen():
+                for _ in range(10):
+                    yield st.lock(m)
+                    yield st.compute(0.004)  # critical section > fair slice
+                    yield st.unlock(m)
+                    yield st.compute(0.001)
+
+            return gen
+
+        def hog_body():
+            def gen():
+                yield st.compute(0.5)
+
+            return gen
+
+        for _ in range(4):
+            lock_tasks.append(sim.spawn(lock_job, lock_body()))
+        for _ in range(4):
+            sim.spawn(hog_job, hog_body())
+        return lock_tasks
+
+    sim_coop = make_sim(n_slots=2, policy=SchedCoop())
+    workload(sim_coop)
+    coop = sim_coop.run()
+
+    sim_fair = make_sim(n_slots=2, policy=SchedFair(slice_s=0.003), max_time=120.0)
+    workload(sim_fair)
+    fair = sim_fair.run()
+
+    assert coop.preemptions == 0
+    assert sim_coop.lhp_preemptions == 0  # by construction: no preemption
+    assert fair.preemptions > 0
+    assert sim_fair.lhp_preemptions > 0   # the baseline preempts lock holders
+    # and pays for it in scheduling overhead
+    assert fair.context_switch_time > coop.context_switch_time
+
+
+def test_quantum_rotates_between_jobs():
+    """§4.1: the per-job quantum (evaluated at scheduling points) rotates
+    service between jobs instead of starving the second job."""
+    sim = make_sim(n_slots=1, policy=SchedCoop(quantum=0.02))
+    j1, j2 = Job("a"), Job("b")
+    first_service = {}
+
+    def body(jname, i):
+        def gen():
+            if jname not in first_service:
+                first_service[jname] = sim.now()
+            yield st.compute(0.01)
+
+        return gen
+
+    # interleave many short tasks of two jobs
+    for i in range(20):
+        sim.spawn(j1, body("a", i))
+        sim.spawn(j2, body("b", i))
+    sim.run()
+    # job b must get service well before job a fully drains (20 x 10ms)
+    assert first_service["b"] < 0.08
+
+
+def test_affinity_preferred_slot():
+    """§4.1: a task that blocks and unblocks is placed back on its last
+    slot when that slot is free."""
+    sim = make_sim(n_slots=4, domains=2)
+    job = Job("j")
+    slots_seen = []
+
+    def body():
+        slots_seen.append(("phase1", _cur_slot()))
+        yield st.compute(0.01)
+        yield st.sleep(0.05)  # blocks; slot may serve others meanwhile
+        slots_seen.append(("phase2", _cur_slot()))
+        yield st.compute(0.01)
+
+    task = sim.spawn(job, body)
+
+    def _cur_slot():
+        return task.slot
+
+    sim.run()
+    assert slots_seen[0][1] == slots_seen[1][1]  # resumed on the same slot
+    assert task.stats.migrations == 0
+
+
+def test_channel_producer_consumer():
+    sim = make_sim(n_slots=2)
+    job = Job("j")
+    ch = st.SimChannel()
+    got = []
+
+    def producer():
+        for i in range(5):
+            yield st.compute(0.01)
+            yield st.channel_put(ch, i)
+
+    def consumer():
+        for _ in range(5):
+            item = yield st.channel_get(ch)
+            got.append(item)
+            yield st.compute(0.005)
+
+    sim.spawn(job, producer)
+    sim.spawn(job, consumer)
+    sim.run()
+    assert got == [0, 1, 2, 3, 4]
+
+
+def test_spawn_join():
+    sim = make_sim(n_slots=2)
+    job = Job("j")
+    from repro.core.task import Task
+
+    events = []
+
+    def child_body():
+        yield st.compute(0.05)
+        events.append("child-done")
+
+    def parent():
+        child = Task(job, body=child_body, name="child")
+        yield st.spawn(child)
+        yield st.compute(0.01)
+        yield st.join(child)
+        events.append("parent-after-join")
+
+    sim.spawn(job, parent)
+    sim.run()
+    assert events == ["child-done", "parent-after-join"]
+
+
+def test_condvar():
+    sim = make_sim(n_slots=2)
+    job = Job("j")
+    m = st.SimMutex()
+    cv = st.SimCondVar()
+    state = {"ready": False}
+    log = []
+
+    def waiter():
+        yield st.lock(m)
+        while not state["ready"]:
+            yield st.cv_wait(cv, m)
+        log.append("consumed")
+        yield st.unlock(m)
+
+    def notifier():
+        yield st.compute(0.05)
+        yield st.lock(m)
+        state["ready"] = True
+        yield st.cv_notify(cv, 1)
+        yield st.unlock(m)
+
+    sim.spawn(job, waiter)
+    sim.spawn(job, notifier)
+    sim.run()
+    assert log == ["consumed"]
+
+
+def test_deadlock_detection():
+    """A mutex never released: the engine reports a cooperative deadlock."""
+    sim = make_sim(n_slots=2)
+    job = Job("j")
+    m = st.SimMutex()
+
+    def holder():
+        yield st.lock(m)
+        yield st.compute(0.01)
+        # never unlocks
+
+    def waiter():
+        yield st.compute(0.005)
+        yield st.lock(m)
+
+    sim.spawn(job, holder)
+    sim.spawn(job, waiter)
+    with pytest.raises(SimDeadlock):
+        sim.run()
+
+
+def test_rr_policy_preempts_and_completes():
+    sim = make_sim(n_slots=2, policy=SchedRR(quantum=0.005))
+    job = Job("j")
+
+    def body():
+        yield st.compute(0.05)
+
+    tasks = [sim.spawn(job, body) for _ in range(6)]
+    stats = sim.run()
+    assert all(t.done for t in tasks)
+    assert stats.preemptions > 0
+
+
+def test_migration_penalty_charged_cross_domain():
+    """Tasks forced to migrate across domains accrue warm-up penalty."""
+    from repro.core.simtask import SimCosts
+
+    costs = SimCosts(migration_cross=0.05)
+    sim = SimExecutor(Topology(2, 2), SchedCoop(), costs=costs)
+    job = Job("j")
+
+    def pinner():
+        # occupy slot 0 forever-ish
+        yield st.compute(1.0)
+
+    def mover():
+        yield st.compute(0.01)   # runs on slot 1 (slot 0 busy)
+        yield st.sleep(0.001)
+        yield st.compute(0.01)
+
+    sim.spawn(job, pinner)
+    t = sim.spawn(job, mover)
+    sim.run()
+    assert t.done

@@ -1,0 +1,79 @@
+"""Integration: the dry-run harness end-to-end in a subprocess (8 fake
+devices, debug mesh) — exercises mesh construction, shardings, lowering,
+compile, memory/cost analysis, collective parsing and the probe
+decomposition exactly as the production 512-device sweep does."""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run_dryrun(tmp_path, *args):
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--debug-mesh",
+         "--out", str(tmp_path), *args],
+        capture_output=True, text=True, timeout=900, env=env, cwd=str(REPO),
+    )
+
+
+@pytest.mark.slow
+def test_dryrun_train_cell_debug_mesh(tmp_path):
+    p = _run_dryrun(tmp_path, "--arch", "smollm_360m", "--shape", "train_4k")
+    assert p.returncode == 0, p.stdout[-2000:] + p.stderr[-2000:]
+    out = json.loads(
+        (tmp_path / "smollm_360m.train_4k.debug.json").read_text()
+    )
+    assert out["status"] == "ok"
+    r = out["roofline"]
+    assert r["flops_global"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert 0 < r["useful_flops_ratio"] <= 1.5
+    assert out["probes"]["derived"]["per_layer_flops"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell_debug_mesh(tmp_path):
+    p = _run_dryrun(tmp_path, "--arch", "mamba2_2_7b", "--shape",
+                    "decode_32k")
+    assert p.returncode == 0, p.stdout[-2000:] + p.stderr[-2000:]
+    out = json.loads(
+        (tmp_path / "mamba2_2_7b.decode_32k.debug.json").read_text()
+    )
+    assert out["status"] == "ok"
+    assert out["full"]["memory"]["peak_bytes_est"] > 0
+
+
+def test_sharding_rules_under_fake_devices():
+    """Re-runs the mesh-dependent sharding-rule tests with 8 fake devices
+    (they self-skip in the default 1-device environment)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    p = subprocess.run(
+        [sys.executable, "-m", "pytest", "tests/test_sharding_rules.py",
+         "-q", "--no-header"],
+        capture_output=True, text=True, timeout=600, env=env, cwd=str(REPO),
+    )
+    assert p.returncode == 0, p.stdout[-2000:]
+    assert "skipped" not in p.stdout.splitlines()[-1]
+
+
+def test_dryrun_skip_cell(tmp_path):
+    """Encoder-only arch x decode shape must be recorded as a skip."""
+    p = _run_dryrun(tmp_path, "--arch", "hubert_xlarge", "--shape",
+                    "decode_32k")
+    assert p.returncode == 0
+    out = json.loads(
+        (tmp_path / "hubert_xlarge.decode_32k.debug.json").read_text()
+    )
+    assert out["status"] == "skip"
+    assert "encoder-only" in out["reason"]

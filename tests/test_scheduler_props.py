@@ -1,0 +1,181 @@
+"""Property-based tests (hypothesis) for USF scheduler invariants.
+
+Random multi-job workloads of compute / mutex / sleep / yield ops are run
+under every policy; we assert the framework invariants:
+
+  P1. Completion: every task finishes (no lost wakeups, no stuck queues).
+  P2. I2: SCHED_COOP never preempts; preemptive policies may.
+  P3. Work conservation: accounted run time >= requested compute time, and
+      bounded above by compute + dispatch overheads.
+  P4. Mutual exclusion: critical sections never overlap.
+  P5. Determinism: the sim is reproducible (same seed -> same makespan).
+"""
+
+import math
+
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import simtask as st
+from repro.core.events import SimExecutor
+from repro.core.policies import SchedCoop, SchedFair, SchedRR
+from repro.core.task import Job
+from repro.core.topology import Topology
+
+# an op-program is a list of (kind, value) drawn from this:
+_op = hst.one_of(
+    hst.tuples(hst.just("compute"), hst.floats(0.0005, 0.02)),
+    hst.tuples(hst.just("crit"), hst.floats(0.0005, 0.01)),  # lock+compute+unlock
+    hst.tuples(hst.just("sleep"), hst.floats(0.0005, 0.01)),
+    hst.tuples(hst.just("yield"), hst.just(0.0)),
+)
+
+workloads = hst.tuples(
+    hst.integers(1, 4),                      # n_slots
+    hst.integers(1, 3),                      # n_jobs
+    hst.lists(hst.lists(_op, min_size=1, max_size=5), min_size=1, max_size=10),
+)
+
+policies = hst.sampled_from(["coop", "fair", "rr"])
+
+
+def _mk_policy(name):
+    return {
+        "coop": lambda: SchedCoop(quantum=0.01),
+        "fair": lambda: SchedFair(slice_s=0.002),
+        "rr": lambda: SchedRR(quantum=0.002),
+    }[name]()
+
+
+@settings(max_examples=40, deadline=None)
+@given(workloads, policies)
+def test_invariants_random_workloads(workload, polname):
+    n_slots, n_jobs, programs = workload
+    policy = _mk_policy(polname)
+    sim = SimExecutor(Topology(n_slots, 1), policy, max_time=600.0)
+    jobs = [Job(f"j{i}") for i in range(n_jobs)]
+    mutex = st.SimMutex()
+    cs = {"cur": 0, "max": 0}
+    requested_compute = 0.0
+
+    def body(prog):
+        def gen():
+            for kind, v in prog:
+                if kind == "compute":
+                    yield st.compute(v)
+                elif kind == "crit":
+                    yield st.lock(mutex)
+                    cs["cur"] += 1
+                    cs["max"] = max(cs["max"], cs["cur"])
+                    yield st.compute(v)
+                    cs["cur"] -= 1
+                    yield st.unlock(mutex)
+                elif kind == "sleep":
+                    yield st.sleep(v)
+                elif kind == "yield":
+                    yield st.yield_()
+
+        return gen
+
+    tasks = []
+    for i, prog in enumerate(programs):
+        requested_compute += sum(
+            v for k, v in prog if k in ("compute", "crit")
+        )
+        tasks.append(sim.spawn(jobs[i % n_jobs], body(prog)))
+
+    stats = sim.run()
+
+    # P1 completion
+    assert all(t.done for t in tasks)
+    # P2 preemption discipline
+    if polname == "coop":
+        assert stats.preemptions == 0
+    # P3 work conservation (run_time includes dispatch delays; bound them)
+    overhead_bound = stats.dispatches * (
+        sim.costs.ctx_switch + sim.costs.dispatch_latency + sim.costs.migration_cross
+    )
+    assert stats.total_run_time >= requested_compute - 1e-9
+    assert stats.total_run_time <= requested_compute + overhead_bound + 1e-9
+    # P4 mutual exclusion
+    assert cs["max"] <= 1
+    # slots never oversubscribed in accounting: busy fraction <= 1 (+eps)
+    assert stats.slot_busy_fraction <= 1.0 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(workloads)
+def test_simulation_deterministic(workload):
+    """P5: two identical runs produce identical makespans and stats."""
+    n_slots, n_jobs, programs = workload
+
+    def run_once():
+        sim = SimExecutor(Topology(n_slots, 1), SchedCoop(), max_time=600.0)
+        jobs = [Job(f"j{i}") for i in range(n_jobs)]
+
+        def body(prog):
+            def gen():
+                for kind, v in prog:
+                    if kind in ("compute", "crit"):
+                        yield st.compute(v)
+                    elif kind == "sleep":
+                        yield st.sleep(v)
+                    else:
+                        yield st.yield_()
+
+            return gen
+
+        for i, prog in enumerate(programs):
+            sim.spawn(jobs[i % n_jobs], body(prog))
+        s = sim.run()
+        return (s.makespan, s.dispatches, s.migrations, s.tasks_completed)
+
+    assert run_once() == run_once()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    hst.integers(2, 6),   # parties
+    hst.integers(1, 8),   # slots
+    hst.integers(1, 16),  # yield_every
+)
+def test_spin_barrier_always_completes_with_yield(parties, n_slots, yield_every):
+    """The §5.2 adaptation guarantees progress for ANY (parties, slots)
+    combination under SCHED_COOP — even parties >> slots."""
+    sim = SimExecutor(Topology(n_slots, 1), SchedCoop(), max_time=300.0)
+    job = Job("j")
+    bar = st.SimSpinBarrier(parties, yield_every=yield_every)
+
+    def body():
+        yield st.compute(0.001)
+        yield st.spin_barrier_wait(bar)
+        yield st.compute(0.001)
+
+    tasks = [sim.spawn(job, body) for _ in range(parties)]
+    sim.run()
+    assert all(t.done for t in tasks)
+
+
+@settings(max_examples=15, deadline=None)
+@given(hst.integers(1, 3), hst.integers(2, 12))
+def test_fifo_mutex_order_any_shape(n_slots, n_waiters):
+    """P-FIFO: mutex handoff strictly follows arrival order regardless of
+    slot count (Listing 1's explicit FIFO queue)."""
+    sim = SimExecutor(Topology(n_slots, 1), SchedCoop(), max_time=300.0)
+    job = Job("j")
+    m = st.SimMutex()
+    order = []
+
+    def body(i):
+        def gen():
+            yield st.compute(0.001 * (i + 1))  # distinct arrival times
+            yield st.lock(m)
+            order.append(i)
+            yield st.compute(0.005)
+            yield st.unlock(m)
+
+        return gen
+
+    for i in range(n_waiters):
+        sim.spawn(job, body(i))
+    sim.run()
+    assert order == sorted(order)

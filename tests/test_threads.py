@@ -1,0 +1,271 @@
+"""Real-thread USF runtime tests: gating, thread cache, TLS, sync primitives.
+
+These run genuine Python threads through the scheduler — the "glibcv" mode
+that executes real JAX work in the serving engine and examples.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.policies import SchedCoop
+from repro.core.sync import (
+    BusyWaitBarrier,
+    CoopBarrier,
+    CoopCondVar,
+    CoopEvent,
+    CoopMutex,
+    CoopSemaphore,
+)
+from repro.core.task import Job
+from repro.core.threads import UsfRuntime
+from repro.core.topology import Topology
+
+
+@pytest.fixture
+def rt():
+    runtime = UsfRuntime(Topology(2, 1), SchedCoop())
+    yield runtime
+    runtime.shutdown(timeout=5.0)
+
+
+def _join_all(rt, tasks, timeout=10.0):
+    for t in tasks:
+        assert rt.join(t, timeout=timeout), f"timeout joining {t}"
+
+
+def test_gating_limits_concurrency(rt):
+    """I1 in real mode: at most n_slots tasks run concurrently even when 8
+    are created (the rest park, exactly like glibcv's blocked pthreads)."""
+    lock = threading.Lock()
+    state = {"cur": 0, "max": 0}
+    job = Job("j")
+
+    def body():
+        with lock:
+            state["cur"] += 1
+            state["max"] = max(state["max"], state["cur"])
+        time.sleep(0.02)
+        with lock:
+            state["cur"] -= 1
+
+    tasks = [rt.create(body, job=job) for _ in range(8)]
+    _join_all(rt, tasks)
+    assert state["max"] <= 2
+
+
+def test_thread_cache_reuse(rt):
+    """§4.3.1: sequential create/join cycles reuse parked workers."""
+    job = Job("j")
+    for _ in range(6):
+        t = rt.create(lambda: time.sleep(0.001), job=job)
+        assert rt.join(t, timeout=5.0)
+    assert rt.cache_hits >= 4
+    assert rt.cache_misses <= 2
+
+
+def test_tls_stable_across_blocking(rt):
+    """The seamlessness claim: a task stays on one worker thread for its
+    whole life, so threading.local state survives blocking points."""
+    job = Job("j")
+    sem = CoopSemaphore(rt, value=0)
+    tls = threading.local()
+    results = []
+
+    def blocker():
+        tls.value = "mine"
+        tls.ident0 = threading.get_ident()
+        sem.acquire()  # blocking point: slot is released and re-acquired
+        results.append(
+            (tls.value, tls.ident0 == threading.get_ident())
+        )
+
+    def releaser():
+        time.sleep(0.05)
+        sem.release()
+
+    t1 = rt.create(blocker, job=job)
+    t2 = rt.create(releaser, job=job)
+    _join_all(rt, [t1, t2])
+    assert results == [("mine", True)]
+
+
+def test_coop_mutex_mutual_exclusion(rt):
+    job = Job("j")
+    m = CoopMutex(rt)
+    counter = {"v": 0, "in_cs": 0, "max_in_cs": 0}
+
+    def body():
+        for _ in range(50):
+            m.lock()
+            counter["in_cs"] += 1
+            counter["max_in_cs"] = max(counter["max_in_cs"], counter["in_cs"])
+            counter["v"] += 1
+            counter["in_cs"] -= 1
+            m.unlock()
+
+    tasks = [rt.create(body, job=job) for _ in range(4)]
+    _join_all(rt, tasks)
+    assert counter["v"] == 200
+    assert counter["max_in_cs"] == 1
+
+
+def test_coop_barrier(rt):
+    job = Job("j")
+    b = CoopBarrier(rt, 4)
+    phase_counts = []
+    lock = threading.Lock()
+    arrived = {"n": 0}
+
+    def body():
+        with lock:
+            arrived["n"] += 1
+        b.wait()
+        with lock:
+            phase_counts.append(arrived["n"])
+
+    tasks = [rt.create(body, job=job) for _ in range(4)]
+    _join_all(rt, tasks)
+    # nobody passed the barrier before all 4 arrived
+    assert phase_counts == [4, 4, 4, 4]
+
+
+def test_coop_condvar(rt):
+    job = Job("j")
+    m = CoopMutex(rt)
+    cv = CoopCondVar(rt, m)
+    state = {"ready": False, "consumed": False}
+
+    def waiter():
+        m.lock()
+        while not state["ready"]:
+            cv.wait()
+        state["consumed"] = True
+        m.unlock()
+
+    def notifier():
+        time.sleep(0.02)
+        m.lock()
+        state["ready"] = True
+        cv.notify()
+        m.unlock()
+
+    tasks = [rt.create(waiter, job=job), rt.create(notifier, job=job)]
+    _join_all(rt, tasks)
+    assert state["consumed"]
+
+
+def test_coop_event(rt):
+    job = Job("j")
+    ev = CoopEvent(rt)
+    order = []
+
+    def waiter():
+        ev.wait()
+        order.append("woken")
+
+    def setter():
+        time.sleep(0.02)
+        order.append("setting")
+        ev.set()
+
+    tasks = [rt.create(waiter, job=job), rt.create(setter, job=job)]
+    _join_all(rt, tasks)
+    assert order == ["setting", "woken"]
+
+
+def test_busywait_barrier_with_yield_completes(rt):
+    """§5.2 in real mode: 3 spinners on 2 slots complete thanks to the
+    yield adaptation (without it they would livelock the runtime)."""
+    job = Job("j")
+    b = BusyWaitBarrier(rt, 3, yield_every=1)
+
+    def body():
+        b.wait(max_spins=100_000)
+
+    tasks = [rt.create(body, job=job) for _ in range(3)]
+    _join_all(rt, tasks)
+
+
+def test_yield_now(rt):
+    job = Job("j")
+    seen = []
+
+    def body(i):
+        def fn():
+            seen.append(i)
+            rt.yield_now()
+            seen.append(i)
+
+        return fn
+
+    tasks = [rt.create(body(i), job=job) for i in range(4)]
+    _join_all(rt, tasks)
+    assert sorted(seen) == [0, 0, 1, 1, 2, 2, 3, 3]
+
+
+def test_sleep_is_a_scheduling_point(rt):
+    """rt.sleep releases the slot: with 1 sleeping + 1 computing task on a
+    1-slot runtime, the computing task runs *during* the sleep."""
+    runtime = UsfRuntime(Topology(1, 1), SchedCoop())
+    try:
+        job = Job("j")
+        order = []
+
+        def sleeper():
+            order.append("sleep-start")
+            runtime.sleep(0.2)
+            order.append("sleep-end")
+
+        def worker():
+            order.append("worked")
+
+        t1 = runtime.create(sleeper, job=job)
+        time.sleep(0.05)
+        t2 = runtime.create(worker, job=job)
+        _join_all(runtime, [t1, t2])
+        assert order == ["sleep-start", "worked", "sleep-end"]
+    finally:
+        runtime.shutdown(timeout=5.0)
+
+
+def test_free_mode_is_unmanaged():
+    """gating=False = the Linux-baseline: all threads run concurrently."""
+    runtime = UsfRuntime(Topology(2, 1), SchedCoop(), gating=False)
+    try:
+        job = Job("j")
+        lock = threading.Lock()
+        state = {"cur": 0, "max": 0}
+        go = threading.Event()
+
+        def body():
+            with lock:
+                state["cur"] += 1
+                state["max"] = max(state["max"], state["cur"])
+            go.wait(1.0)
+            with lock:
+                state["cur"] -= 1
+
+        tasks = [runtime.create(body, job=job) for _ in range(6)]
+        time.sleep(0.2)
+        go.set()
+        _join_all(runtime, tasks)
+        assert state["max"] == 6  # oversubscribed: nobody was gated
+    finally:
+        runtime.shutdown(timeout=5.0)
+
+
+def test_affinity_hint_stored_and_returned(rt):
+    """§4.3.2: setaffinity is a hint; getaffinity returns the stored hint."""
+    job = Job("j")
+    out = {}
+
+    def body():
+        t = rt.current_task()
+        t.set_affinity_hint(frozenset({0}))
+        out["hint"] = t.get_affinity()
+
+    task = rt.create(body, job=job)
+    _join_all(rt, [task])
+    assert out["hint"] == frozenset({0})
