@@ -1,0 +1,17 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: check test test-all bench-sched-ops
+
+## check: the fast CI gate — clean-collecting tier-1 tests (slow ones are
+## deselected via pyproject addopts) + the sched-ops microbench in smoke mode
+check: test bench-sched-ops
+
+test:
+	$(PY) -m pytest -q
+
+test-all:
+	$(PY) -m pytest -q -m ""
+
+bench-sched-ops:
+	$(PY) -m benchmarks.sched_ops --smoke --out BENCH_sched_ops.smoke.json

@@ -16,12 +16,21 @@ Fidelity notes:
   ``SimLivelock`` instead of spinning forever.
 * Migration penalties (affinity warm-up) are charged on dispatch based on
   topology distance.
+
+Engine fast path: the hot event kinds (dispatch-resume, compute
+completion, spin polls, stalls, preemption ticks, sleep wakeups) are
+plain ``(time, seq, kind, a, b, c)`` heap tuples dispatched by an
+integer tag in a locals-bound drain loop — no per-event closure is
+allocated for them. Generic callables (rare: delayed spawns, external
+hooks) still go through ``_post``. Consecutive same-timestamp sleep
+wakeups are drained as one batch through ``Scheduler.unblock_batch``
+(identical per-task semantics, one lock round-trip). ``seq`` is unique,
+so tuple comparison never reaches the payload fields.
 """
 
 from __future__ import annotations
 
 import heapq
-import itertools
 from typing import Any, Callable, Optional
 
 from repro.core.policies.base import Policy
@@ -41,10 +50,9 @@ from repro.core.topology import Topology
 
 
 def _owned(task: Task) -> set:
-    s = getattr(task, "_owned_mutexes", None)
+    s = task._owned_mutexes
     if s is None:
-        s = set()
-        task._owned_mutexes = s  # type: ignore[attr-defined]
+        s = task._owned_mutexes = set()
     return s
 
 
@@ -60,6 +68,16 @@ class SimDeadlock(RuntimeError):
     pass
 
 
+# heap-event kind tags (values are cosmetic; dispatch is by identity)
+_EV_CALL = 0     # a = zero-arg callable (generic / cold path)
+_EV_RESUME = 1   # a = task, b = slot_id, c = epoch  (post-dispatch resume)
+_EV_COMPUTE = 2  # a = task, b = slot_id, c = epoch  (compute segment done)
+_EV_SPIN = 3     # a = task, b = slot_id, c = epoch  (next busy-wait poll)
+_EV_STALL = 4    # a = task, b = slot_id, c = epoch  (non-sched-point stall)
+_EV_TICK = 5     # a = slot_id                        (preemption tick)
+_EV_WAKE = 6     # a = task                           (sleep expiry)
+
+
 class SimExecutor:
     def __init__(
         self,
@@ -73,14 +91,19 @@ class SimExecutor:
         self.topology = topology
         self.costs = costs or SimCosts()
         self._now = 0.0
-        self._heap: list[tuple[float, int, Callable[[], None]]] = []
-        self._seq = itertools.count()
+        #: (time, seq, kind, a, b, c) — see the _EV_* tags above
+        self._heap: list[tuple] = []
+        self._seq = 0
         self.max_time = max_time
         self.max_events = max_events
+        #: events drained so far (benchmarks/sched_ops.py reads this)
+        self.events_processed = 0
         self._useful_flops = 0.0
         #: Lock-Holder-Preemption events: a task preempted while owning a
         #: mutex (the §1/§6 pathology SCHED_COOP eliminates by design).
         self.lhp_preemptions = 0
+        #: constant part of every dispatch delay, hoisted out of the hot path
+        self._base_delay = self.costs.ctx_switch + self.costs.dispatch_latency
         self.sched = Scheduler(
             topology,
             policy,
@@ -112,20 +135,71 @@ class SimExecutor:
     def run(self, *, until: Optional[float] = None) -> SchedStats:
         """Drain all events (or run until virtual time ``until``)."""
         limit = until if until is not None else self.max_time
+        # bind hot attributes to locals: this loop is the whole sim
+        heap = self._heap
+        heappop = heapq.heappop
+        resume = self._resume
+        advance = self._advance
+        valid = self._valid
+        sched = self.sched
+        unblock_batch = sched.unblock_batch
+        max_events = self.max_events
         n = 0
-        while self._heap:
-            t = self._heap[0][0]
-            if t > limit:
-                self._now = limit
-                if until is None:
-                    self._raise_stuck()
-                break
-            _, _, fn = heapq.heappop(self._heap)
-            self._now = t
-            fn()
-            n += 1
-            if n > self.max_events:
-                raise SimTimeout(f"event cap exceeded: {self.sched.snapshot()}")
+        try:
+            while heap:
+                entry = heap[0]
+                t = entry[0]
+                if t > limit:
+                    self._now = limit
+                    if until is None:
+                        self._raise_stuck()
+                    break
+                heappop(heap)
+                self._now = t
+                kind = entry[2]
+                if kind == _EV_RESUME:
+                    resume(entry[3], entry[4], entry[5])
+                elif kind == _EV_COMPUTE:
+                    task = entry[3]
+                    slot_id = entry[4]
+                    if valid(task, slot_id, entry[5]):
+                        self._useful_flops += task._pending[2]
+                        task._pending = None
+                        advance(task, slot_id)
+                elif kind == _EV_WAKE:
+                    # batch same-timestamp sleep expiries: one lock
+                    # round-trip, identical per-task make-ready/fill order
+                    task = entry[3]
+                    if heap and heap[0][0] == t and heap[0][2] == _EV_WAKE:
+                        batch = [task]
+                        while heap and heap[0][0] == t and heap[0][2] == _EV_WAKE:
+                            batch.append(heappop(heap)[3])
+                            n += 1
+                        unblock_batch(batch)
+                    else:
+                        sched.unblock(task)
+                elif kind == _EV_SPIN:
+                    task = entry[3]
+                    slot_id = entry[4]
+                    if valid(task, slot_id, entry[5]):
+                        pend = task._pending
+                        self._spin_check(task, slot_id, pend[1], pend[2],
+                                         pend[3])
+                elif kind == _EV_STALL:
+                    task = entry[3]
+                    if valid(task, entry[4], entry[5]):
+                        advance(task, entry[4])
+                elif kind == _EV_TICK:
+                    self._tick(entry[3])
+                else:  # _EV_CALL
+                    entry[3]()
+                n += 1
+                if n > max_events:
+                    raise SimTimeout(
+                        f"event cap exceeded: {self.sched.snapshot()}"
+                    )
+        finally:
+            self.events_processed += n
         if until is None and not self._heap:
             undone = [t for t in self.sched.all_tasks if not t.done]
             if undone:
@@ -143,7 +217,16 @@ class SimExecutor:
     # engine internals
     # ------------------------------------------------------------------ #
     def _post(self, t: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (t, next(self._seq), fn))
+        """Generic (cold-path) event: a zero-arg callable."""
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (t, seq, _EV_CALL, fn, None, None))
+
+    def _post_ev(self, t: float, kind: int, a=None, b=None, c=None) -> None:
+        """Closure-free hot-path event."""
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (t, seq, kind, a, b, c))
 
     def _submit(self, task: Task) -> None:
         task._gen = task.body()  # type: ignore[attr-defined]
@@ -154,9 +237,9 @@ class SimExecutor:
 
     def _on_dispatch(self, task: Task, slot_id: int) -> None:
         """Scheduler picked ``task`` for ``slot_id``: resume after swap costs."""
-        epoch = task._epoch  # type: ignore[attr-defined]
-        scale = getattr(task, "_warmup_scale", 1.0)
-        delay = self.costs.ctx_switch + self.costs.dispatch_latency
+        epoch = task._epoch
+        scale = task._warmup_scale
+        delay = self._base_delay
         if task.last_slot is not None and task.last_slot != slot_id:
             dist = self.topology.distance(task.last_slot, slot_id)
             delay += self.costs.migration_penalty(dist) * scale
@@ -166,7 +249,7 @@ class SimExecutor:
             # between (preemption/interleaving noise — paper §1, §5.3)
             delay += self.costs.cache_refill * scale
         self._slot_last[slot_id] = task.tid
-        self._post(self._now + delay, lambda: self._resume(task, slot_id, epoch))
+        self._post_ev(self._now + delay, _EV_RESUME, task, slot_id, epoch)
         self._arm_tick(slot_id)
 
     def _valid(self, task: Task, slot_id: int, epoch: int) -> bool:
@@ -218,17 +301,16 @@ class SimExecutor:
             self._start_compute(task, slot_id, op[1], op[2])
             return False
 
+        if kind == "yield":  # hot under §5.2-adapted workloads: check early
+            self._bump(task)
+            self.sched.yield_(task)
+            return False
+
         if kind == "stall":
             # holds the slot, not useful, not a scheduling point (§5.6)
-            epoch = task._epoch  # type: ignore[attr-defined]
             dt = op[1]
             task.stats.spin_time += dt
-
-            def stall_done() -> None:
-                if self._valid(task, slot_id, epoch):
-                    self._advance(task, slot_id)
-
-            self._post(self._now + dt, stall_done)
+            self._post_ev(self._now + dt, _EV_STALL, task, slot_id, task._epoch)
             return False
 
         if kind == "lock":
@@ -331,12 +413,7 @@ class SimExecutor:
         if kind == "sleep":
             dt = op[1]
             self._block(task)
-            self._post(self._now + dt, lambda: self.sched.unblock(task))
-            return False
-
-        if kind == "yield":
-            self._bump(task)
-            self.sched.yield_(task)
+            self._post_ev(self._now + dt, _EV_WAKE, task)
             return False
 
         if kind == "spawn":
@@ -378,17 +455,9 @@ class SimExecutor:
 
     # -- compute & spin -------------------------------------------------- #
     def _start_compute(self, task: Task, slot_id: int, dt: float, flops: float) -> None:
-        epoch = task._epoch  # type: ignore[attr-defined]
-        task._pending = ("compute", dt, flops)  # type: ignore[attr-defined]
-        task._pending_started = self._now  # type: ignore[attr-defined]
-
-        def compute_done() -> None:
-            if self._valid(task, slot_id, epoch):
-                task._pending = None  # type: ignore[attr-defined]
-                self._useful_flops += flops
-                self._advance(task, slot_id)
-
-        self._post(self._now + dt, compute_done)
+        task._pending = ("compute", dt, flops)
+        task._pending_started = self._now
+        self._post_ev(self._now + dt, _EV_COMPUTE, task, slot_id, task._epoch)
 
     def _spin_check(
         self,
@@ -414,14 +483,10 @@ class SimExecutor:
             self._bump(task)
             self.sched.yield_(task)
             return
-        epoch = task._epoch  # type: ignore[attr-defined]
-
-        def again() -> None:
-            if self._valid(task, slot_id, epoch):
-                self._spin_check(task, slot_id, bar, my_gen, nxt)
-            # else: preempted mid-spin; _pending already saved
-
-        self._post(self._now + bar.spin_slice, again)
+        # next poll; if preempted meanwhile the epoch check kills the event
+        # and _pending (always current) lets the resume continue the spin
+        self._post_ev(self._now + bar.spin_slice, _EV_SPIN, task, slot_id,
+                      task._epoch)
 
     # -- blocking helper -------------------------------------------------- #
     def _block(self, task: Task) -> None:
@@ -436,7 +501,7 @@ class SimExecutor:
         if slot_id in self._tick_armed:
             return
         self._tick_armed.add(slot_id)
-        self._post(self._now + pol.tick_interval, lambda: self._tick(slot_id))
+        self._post_ev(self._now + pol.tick_interval, _EV_TICK, slot_id)
 
     def _tick(self, slot_id: int) -> None:
         self._tick_armed.discard(slot_id)

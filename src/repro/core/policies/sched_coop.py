@@ -40,8 +40,8 @@ class _JobQueues:
         # A yielding task goes to the back of the global order (nosv_yield):
         # re-enqueueing it by affinity would let it get re-picked instantly,
         # defeating the §5.2 busy-wait adaptation.
-        if getattr(task, "_yielded", False):
-            task._yielded = False  # type: ignore[attr-defined]
+        if task._yielded:
+            task._yielded = False
             self.unaffine.append(task)
         elif task.last_slot is None:
             self.unaffine.append(task)
@@ -76,11 +76,17 @@ class SchedCoop(Policy):
         self._jobs: "OrderedDict[int, _JobQueues]" = OrderedDict()
         self._current_jid: Optional[int] = None
         self._quantum_used: float = 0.0
+        # registration-ordered job list + positions: the rotation order is
+        # index arithmetic over this list, never rebuilt per pick
+        self._jid_list: list[int] = []
+        self._jid_pos: dict[int, int] = {}
 
     # -- job management -------------------------------------------------- #
     def on_job(self, job: Job) -> None:
         if job.jid not in self._jobs:
             self._jobs[job.jid] = _JobQueues(job)
+            self._jid_pos[job.jid] = len(self._jid_list)
+            self._jid_list.append(job.jid)
             if self._current_jid is None:
                 self._current_jid = job.jid
 
@@ -101,13 +107,10 @@ class SchedCoop(Policy):
             self._advance_current()
 
     def _advance_current(self) -> None:
-        jids = list(self._jobs.keys())
+        jids = self._jid_list
         if not jids:
             return
-        try:
-            i = jids.index(self._current_jid)
-        except ValueError:
-            i = -1
+        i = self._jid_pos.get(self._current_jid, -1)
         n = len(jids)
         # next job with ready tasks; else keep rotating pointer anyway
         for off in range(1, n + 1):
@@ -117,22 +120,22 @@ class SchedCoop(Policy):
             if self._jobs[jid].size > 0:
                 return
 
-    def _rotation_order(self) -> list[int]:
-        jids = list(self._jobs.keys())
-        if self._current_jid is None or self._current_jid not in self._jobs:
-            return jids
-        i = jids.index(self._current_jid)
-        return jids[i:] + jids[:i]
-
     # -- picking ----------------------------------------------------------- #
     def pick(self, slot_id: int) -> Optional[Task]:
         self._rotate_if_expired()
         assert self.sched is not None
-        neighbors = list(self.sched.topology.neighbors_first(slot_id))
-        for jid in self._rotation_order():
-            task = self._jobs[jid].pop_for(slot_id, neighbors)
-            if task is not None:
-                return task
+        neighbors = self.sched.topology.neighbors_first(slot_id)
+        jobs = self._jobs
+        jids = self._jid_list
+        n = len(jids)
+        # rotation order: current job first, then registration order wrapped
+        start = self._jid_pos.get(self._current_jid, 0)
+        for off in range(n):
+            jq = jobs[jids[(start + off) % n]]
+            if jq.size:  # empty jobs can't serve: skip the placement search
+                task = jq.pop_for(slot_id, neighbors)
+                if task is not None:
+                    return task
         return None
 
     # -- accounting --------------------------------------------------------- #

@@ -71,6 +71,9 @@ class Scheduler:
         self._dispatch_cb = dispatch
         self.ctx_switch_cost = ctx_switch_cost
         self._slots = [_SlotState() for _ in topology.slots]
+        #: idle-slot free-list: exactly the slots with ``running is None``.
+        #: Maintained by _run_on/_stop_running so fill never scans all slots.
+        self._idle: set[int] = set(range(topology.n_slots))
         self.jobs: dict[int, Job] = {}
         self.all_tasks: list[Task] = []
         self._lock = threading.RLock()
@@ -94,13 +97,28 @@ class Scheduler:
         """New or re-submitted task becomes READY and is queued (never runs
         directly — glibcv blocks freshly created pthreads until dispatched)."""
         with self._lock:
+            now = self.clock()
             if task.job.jid not in self.jobs:
                 self.register_job(task.job)
             if task.state is TaskState.CREATED:
                 self.all_tasks.append(task)
-                task.stats.created_at = self.clock()
-            self._make_ready(task)
-            self._fill_idle_slots()
+                task.stats.created_at = now
+            self._make_ready(task, now)
+            self._fill_idle_slots(now)
+
+    def unblock_batch(self, tasks) -> None:
+        """Unblock several tasks under one lock acquisition, preserving the
+        per-task make-ready/fill sequence (same placement as N unblocks).
+        The event engine uses this to coalesce same-timestamp wakeups."""
+        with self._lock:
+            now = self.clock()
+            for task in tasks:
+                if task.state is not TaskState.BLOCKED:
+                    task._pending_wakeups += 1
+                    continue
+                task.stats.blocked_time += now - task._blocked_at  # type: ignore[attr-defined]
+                self._make_ready(task, now)
+                self._fill_idle_slots(now)
 
     def block(self, task: Task) -> Optional[Task]:
         """Task reached a blocking point: free its slot, swap in the next.
@@ -110,14 +128,14 @@ class Scheduler:
         requeued immediately instead of parking (futex wake-before-wait).
         """
         with self._lock:
-            slot = self._stop_running(task, StopReason.BLOCK)
+            slot, now = self._stop_running(task, StopReason.BLOCK)
             if task._pending_wakeups > 0:
                 task._pending_wakeups -= 1
-                self._make_ready(task)
+                self._make_ready(task, now)
             else:
                 task.state = TaskState.BLOCKED
-                task._blocked_at = self.clock()  # type: ignore[attr-defined]
-            return self._fill(slot)
+                task._blocked_at = now  # type: ignore[attr-defined]
+            return self._fill(slot, now)
 
     def unblock(self, task: Task) -> None:
         """Blocking condition satisfied: queue the task (I3), fill idle slots."""
@@ -126,9 +144,10 @@ class Scheduler:
                 # raced ahead of the block (real-thread mode): remember it
                 task._pending_wakeups += 1
                 return
-            task.stats.blocked_time += self.clock() - task._blocked_at  # type: ignore[attr-defined]
-            self._make_ready(task)
-            self._fill_idle_slots()
+            now = self.clock()
+            task.stats.blocked_time += now - task._blocked_at  # type: ignore[attr-defined]
+            self._make_ready(task, now)
+            self._fill_idle_slots(now)
 
     def yield_(self, task: Task) -> Optional[Task]:
         """Voluntary yield (sched_yield / nosv_yield): requeue behind peers.
@@ -137,31 +156,31 @@ class Scheduler:
         nothing else is ready — yield is then a no-op, as on Linux).
         """
         with self._lock:
-            slot = self._stop_running(task, StopReason.YIELD)
+            slot, now = self._stop_running(task, StopReason.YIELD)
             task.stats.yields += 1
             task._yielded = True  # policies deprioritize: go to the back
-            self._make_ready(task)
-            return self._fill(slot)
+            self._make_ready(task, now)
+            return self._fill(slot, now)
 
     def finish(self, task: Task) -> Optional[Task]:
         """Task body ended: mark DONE, run callbacks, swap in the next."""
         with self._lock:
-            slot = self._stop_running(task, StopReason.DONE)
+            slot, now = self._stop_running(task, StopReason.DONE)
             task.state = TaskState.DONE
-            task.stats.done_at = self.clock()
+            task.stats.done_at = now
             for cb in task.on_done:
                 cb(task)
-            return self._fill(slot)
+            return self._fill(slot, now)
 
     def preempt(self, task: Task) -> Optional[Task]:
         """Involuntary preemption — only preemptive baseline policies."""
         with self._lock:
             if not self.policy.preemptive:
                 raise SchedulerError(f"{self.policy.name} must not preempt (I2)")
-            slot = self._stop_running(task, StopReason.PREEMPT)
+            slot, now = self._stop_running(task, StopReason.PREEMPT)
             task.stats.preemptions += 1
-            self._make_ready(task)
-            return self._fill(slot)
+            self._make_ready(task, now)
+            return self._fill(slot, now)
 
     def tick(self, slot_id: int) -> bool:
         """Periodic tick (preemptive policies): should the slot's task be
@@ -175,12 +194,12 @@ class Scheduler:
     # ------------------------------------------------------------------ #
     # internals
     # ------------------------------------------------------------------ #
-    def _make_ready(self, task: Task) -> None:
+    def _make_ready(self, task: Task, now: float) -> None:
         task.state = TaskState.READY
-        task._ready_at = self.clock()  # type: ignore[attr-defined]
+        task._ready_at = now  # type: ignore[attr-defined]
         self.policy.on_ready(task)
 
-    def _stop_running(self, task: Task, reason: StopReason) -> int:
+    def _stop_running(self, task: Task, reason: StopReason) -> tuple[int, float]:
         if task.state is not TaskState.RUNNING or task.slot is None:
             raise SchedulerError(f"stop of non-running {task}")
         slot = task.slot
@@ -194,11 +213,12 @@ class Scheduler:
         self.policy.on_stop(task, slot, now, elapsed, reason)
         st.running = None
         st.idle_since = now
+        self._idle.add(slot)
         task.slot = None
         task.last_slot = slot  # preferred affinity for next time (§4.1)
-        return slot
+        return slot, now
 
-    def _fill(self, slot_id: int) -> Optional[Task]:
+    def _fill(self, slot_id: int, now: float) -> Optional[Task]:
         """Pick and dispatch the next task for an idle slot."""
         st = self._slots[slot_id]
         if st.running is not None:
@@ -206,19 +226,21 @@ class Scheduler:
         task = self.policy.pick(slot_id)
         if task is None:
             return None
-        return self._run_on(task, slot_id)
+        return self._run_on(task, slot_id, now)
 
-    def _fill_idle_slots(self) -> None:
-        for sid, st in enumerate(self._slots):
-            if st.running is None:
-                if self._fill(sid) is None and not self.policy.has_ready():
+    def _fill_idle_slots(self, now: float) -> None:
+        idle = self._idle
+        if not idle or not self.policy.has_ready():
+            return
+        for sid in sorted(idle):
+            if self._slots[sid].running is None:
+                if self._fill(sid, now) is None and not self.policy.has_ready():
                     break  # nothing ready for anyone
 
-    def _run_on(self, task: Task, slot_id: int) -> Task:
-        now = self.clock()
+    def _run_on(self, task: Task, slot_id: int, now: float) -> Task:
         st = self._slots[slot_id]
         assert st.running is None, "I1"
-        task.stats.wait_time += now - getattr(task, "_ready_at", now)
+        task.stats.wait_time += now - task._ready_at  # type: ignore[attr-defined]
         if task.stats.first_run_at is None:
             task.stats.first_run_at = now
         if task.last_slot is not None and task.last_slot != slot_id:
@@ -230,6 +252,7 @@ class Scheduler:
         task.stats.dispatches += 1
         st.running = task
         st.run_started = now
+        self._idle.discard(slot_id)
         self._ctx_switch_time += self.ctx_switch_cost
         self.policy.on_run(task, slot_id, now)
         self._dispatch_cb(task, slot_id)
@@ -242,7 +265,7 @@ class Scheduler:
         return [s.running for s in self._slots]
 
     def idle_slot_ids(self) -> list[int]:
-        return [i for i, s in enumerate(self._slots) if s.running is None]
+        return sorted(self._idle)
 
     def snapshot(self) -> dict:
         with self._lock:

@@ -28,7 +28,7 @@ class TaskState(enum.Enum):
     DONE = "done"
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class TaskStats:
     """Per-task accounting (feeds SchedStats and the benchmarks)."""
 
@@ -54,6 +54,8 @@ class Job:
     baselines weight quanta by it.
     """
 
+    __slots__ = ("jid", "name", "nice", "quantum", "tasks", "service_time")
+
     def __init__(self, name: str, *, nice: int = 0, quantum: Optional[float] = None):
         self.jid: int = next(_JID)
         self.name = name
@@ -77,7 +79,24 @@ class Task:
     A task keeps a *preferred affinity* = the last slot it ran on (§4.1), and
     an optional *user affinity hint* (§4.3.2 — stored, reported back on
     query, but treated as a hint only).
+
+    ``__slots__`` covers the executor-private fields too (sim generator
+    state, thread-runtime handles): tasks are the densest hot-path objects
+    in the system, and slot access keeps pick/dispatch allocation-free.
     """
+
+    __slots__ = (
+        "tid", "job", "body", "name", "cost_hint", "state", "slot",
+        "last_slot", "user_affinity", "stats", "on_done", "_pending_wakeups",
+        "_ctx",
+        # sim-executor fields (events.py)
+        "_gen", "_send", "_epoch", "_pending", "_pending_started",
+        "_warmup_scale", "_owned_mutexes",
+        # scheduler bookkeeping (scheduler.py / policies)
+        "_blocked_at", "_ready_at", "_yielded",
+        # thread-runtime fields (threads.py)
+        "_resume_sem", "_done_event", "_storage", "_exc",
+    )
 
     def __init__(
         self,
@@ -103,6 +122,9 @@ class Task:
         self._pending_wakeups: int = 0
         # executor-private fields:
         self._ctx: Any = None
+        self._yielded = False
+        self._owned_mutexes: Any = None
+        self._warmup_scale: float = 1.0
         job.tasks.append(self)
 
     # -- affinity hints (paper §4.3.2: setaffinity is a hint; getaffinity

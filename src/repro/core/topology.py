@@ -13,7 +13,7 @@ The scheduler only ever needs a distance oracle:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Iterable, Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +40,10 @@ class Topology:
         per = n_slots // n_domains
         self.slots: list[Slot] = [Slot(i, i // per) for i in range(n_slots)]
         self._per_domain = per
+        #: per-slot distance-ordered neighbor tuples, built lazily — the
+        #: allocation-free fast path behind ``neighbors_first`` for hot
+        #: per-pick placement searches (SCHED_COOP §4.1)
+        self._neighbor_cache: list[Optional[tuple[Slot, ...]]] = [None] * n_slots
 
     @property
     def n_slots(self) -> int:
@@ -58,20 +62,23 @@ class Topology:
             return 0
         return 1 if self.domain_of(a) == self.domain_of(b) else 2
 
-    def neighbors_first(self, sid: int) -> Iterable[Slot]:
+    def neighbors_first(self, sid: int) -> tuple[Slot, ...]:
         """All slots ordered by distance from ``sid`` (affinity search order).
 
         This is the SCHED_COOP placement order of §4.1: preferred core, then
-        same NUMA domain, then everything else.
+        same NUMA domain, then everything else. The tuple is computed once
+        per slot and cached, so per-pick placement searches allocate nothing.
         """
-        home = self.slots[sid]
-        yield home
-        for s in self.domain_slots(home.domain):
-            if s.sid != sid:
-                yield s
-        for s in self.slots:
-            if s.domain != home.domain:
-                yield s
+        cached = self._neighbor_cache[sid]
+        if cached is None:
+            home = self.slots[sid]
+            order = [home]
+            order.extend(
+                s for s in self.domain_slots(home.domain) if s.sid != sid
+            )
+            order.extend(s for s in self.slots if s.domain != home.domain)
+            cached = self._neighbor_cache[sid] = tuple(order)
+        return cached
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"Topology({self.name}: {self.n_slots} slots / {self.n_domains} domains)"

@@ -52,6 +52,7 @@ def test_dryrun_decode_cell_debug_mesh(tmp_path):
     assert out["full"]["memory"]["peak_bytes_est"] > 0
 
 
+@pytest.mark.slow
 def test_sharding_rules_under_fake_devices():
     """Re-runs the mesh-dependent sharding-rule tests with 8 fake devices
     (they self-skip in the default 1-device environment)."""
@@ -67,6 +68,7 @@ def test_sharding_rules_under_fake_devices():
     assert "skipped" not in p.stdout.splitlines()[-1]
 
 
+@pytest.mark.slow
 def test_dryrun_skip_cell(tmp_path):
     """Encoder-only arch x decode shape must be recorded as a skip."""
     p = _run_dryrun(tmp_path, "--arch", "hubert_xlarge", "--shape",

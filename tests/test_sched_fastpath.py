@@ -1,0 +1,414 @@
+"""Equivalence + invariant tests for the scheduler hot-path overhaul.
+
+The incremental-EEVDF ``SchedFair`` and the allocation-free ``SchedCoop``
+dispatch must be *behaviourally identical* to the straightforward O(n)/O(n²)
+seed implementations — same pick order, same stats, same makespans. These
+tests pin that down without depending on hypothesis (seeded ``random`` keeps
+them runnable everywhere):
+
+  * ``RefFair`` below IS the seed implementation (O(n) scans over a plain
+    ready list), kept as the executable specification;
+  * lockstep driving: random on_ready/pick/on_stop traces must produce the
+    identical task at every pick, under mixed nice weights and affinities;
+  * end-to-end: random sim workloads run under both policies must produce
+    identical SchedStats;
+  * ``SchedCoop`` dispatch must follow the §4.1 placement order
+    affinity -> unaffine -> same domain -> anywhere;
+  * the framework invariants I1–I4 (at most one task per slot, coop never
+    preempts, unblock queues rather than resumes, determinism) hold on
+    random workloads.
+"""
+
+import random
+from types import SimpleNamespace
+from typing import Optional
+
+import pytest
+
+from repro.core import simtask as st
+from repro.core.events import SimExecutor
+from repro.core.policies import SchedCoop, SchedFair, SchedRR
+from repro.core.policies.base import Policy, StopReason
+from repro.core.task import Job, Task
+from repro.core.topology import Topology
+
+
+# --------------------------------------------------------------------------- #
+# the seed SCHED_FAIR as executable specification
+# --------------------------------------------------------------------------- #
+class RefFair(Policy):
+    """Brute-force EEVDF: the pre-overhaul O(n²) implementation, verbatim."""
+
+    name = "REF_FAIR"
+    preemptive = True
+
+    def __init__(self, *, slice_s: float = 0.003):
+        super().__init__()
+        self.slice_s = slice_s
+        self.tick_interval = slice_s
+        self._ready: list[Task] = []
+        self._vruntime: dict[int, float] = {}
+        self._run_started: dict[int, float] = {}
+        self._min_vruntime = 0.0
+
+    def _w(self, task: Task) -> float:
+        return 1024.0 / (1.25 ** task.job.nice)
+
+    def _vr(self, task: Task) -> float:
+        return self._vruntime.setdefault(task.tid, self._min_vruntime)
+
+    def _pool_virtual_time(self) -> float:
+        if not self._ready:
+            return self._min_vruntime
+        wsum = sum(self._w(t) for t in self._ready)
+        return sum(self._vr(t) * self._w(t) for t in self._ready) / wsum
+
+    def _deadline(self, task: Task) -> float:
+        return self._vr(task) + self.slice_s / self._w(task)
+
+    def on_ready(self, task: Task) -> None:
+        self._vruntime[task.tid] = max(self._vr(task), self._min_vruntime)
+        self._ready.append(task)
+
+    def pick(self, slot_id: int) -> Optional[Task]:
+        if not self._ready:
+            return None
+        V = self._pool_virtual_time()
+        eligible = [t for t in self._ready if self._vr(t) <= V + 1e-12]
+        pool = eligible if eligible else self._ready
+        local = [t for t in pool if t.last_slot in (slot_id, None)]
+        best = min(local or pool, key=self._deadline)
+        self._ready.remove(best)
+        return best
+
+    def on_run(self, task: Task, slot_id: int, now: float) -> None:
+        self._run_started[task.tid] = now
+
+    def on_stop(self, task, slot_id, now, elapsed, reason) -> None:
+        vr = self._vr(task) + elapsed / self._w(task)
+        self._vruntime[task.tid] = vr
+        if self._ready:
+            self._min_vruntime = max(
+                self._min_vruntime, min(self._vr(t) for t in self._ready)
+            )
+        else:
+            self._min_vruntime = max(self._min_vruntime, vr)
+
+    def should_preempt(self, task: Task, slot_id: int, now: float) -> bool:
+        if not self._ready:
+            return False
+        ran = now - self._run_started.get(task.tid, now)
+        return ran >= self.slice_s / self._w(task)
+
+    def ready_count(self) -> int:
+        return len(self._ready)
+
+
+# --------------------------------------------------------------------------- #
+# lockstep pick-order equivalence on random traces
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(25))
+def test_incremental_eevdf_matches_bruteforce(seed):
+    rng = random.Random(seed)
+    n_slots = rng.randint(1, 8)
+    jobs = [Job(f"j{i}", nice=rng.choice([0, 0, 0, 5, 10, -5]))
+            for i in range(3)]
+    tasks = [Task(jobs[i % 3]) for i in range(rng.randint(1, 40))]
+    ref, new = RefFair(slice_s=0.002), SchedFair(slice_s=0.002)
+    now = 0.0
+    queued: set[int] = set()
+    running: dict[int, tuple[Task, int]] = {}
+    for step in range(500):
+        act = rng.random()
+        if act < 0.45 and len(queued) + len(running) < len(tasks):
+            cand = [t for t in tasks
+                    if t.tid not in queued and t.tid not in running]
+            t = rng.choice(cand)
+            t.last_slot = rng.choice([None] + list(range(n_slots)))
+            ref.on_ready(t)
+            new.on_ready(t)
+            queued.add(t.tid)
+        elif act < 0.8 and queued:
+            slot = rng.randrange(n_slots)
+            a, b = ref.pick(slot), new.pick(slot)
+            assert a is b, f"step {step}: ref picked {a}, new picked {b}"
+            queued.discard(a.tid)
+            running[a.tid] = (a, slot)
+            ref.on_run(a, slot, now)
+            new.on_run(a, slot, now)
+        elif running:
+            tid = rng.choice(sorted(running))
+            t, slot = running.pop(tid)
+            elapsed = rng.uniform(1e-4, 1e-2)
+            now += elapsed
+            t.last_slot = slot
+            reason = rng.choice(list(StopReason))
+            ref.on_stop(t, slot, now, elapsed, reason)
+            new.on_stop(t, slot, now, elapsed, reason)
+        assert ref.ready_count() == new.ready_count()
+        assert ref._min_vruntime == new._min_vruntime
+
+
+def test_incremental_eevdf_heaps_stay_bounded_under_churn():
+    """Steady-state churn with a pool that never drains: lazy-invalidated
+    heap entries must be compacted away, not accumulate per admission —
+    and picks must still match the brute-force reference throughout."""
+    jobs = [Job(f"jb{i}", nice=5 * (i % 2)) for i in range(2)]
+    tasks = [Task(jobs[i % 2]) for i in range(256)]
+    ref, new = RefFair(slice_s=0.002), SchedFair(slice_s=0.002)
+    n_slots = 16
+    for i, t in enumerate(tasks):
+        t.last_slot = None if i % 7 == 0 else i % n_slots
+        ref.on_ready(t)
+        new.on_ready(t)
+    now = 0.0
+    for i in range(5000):
+        slot = i % n_slots
+        a, b = ref.pick(slot), new.pick(slot)
+        assert a is b
+        ref.on_run(a, slot, now)
+        new.on_run(a, slot, now)
+        now += 5e-4
+        a.last_slot = slot
+        ref.on_stop(a, slot, now, 5e-4, StopReason.BLOCK)
+        new.on_stop(a, slot, now, 5e-4, StopReason.BLOCK)
+        ref.on_ready(a)
+        new.on_ready(a)
+    # pool held at 256 the whole time; without compaction _dl_all would
+    # hold ~5256 entries here
+    assert new.ready_count() == 256
+    assert len(new._dl_all) <= 4 * 256 + 1
+    assert len(new._vr_heap) <= 4 * 256 + 1
+
+
+def test_events_processed_not_double_counted_at_max_time():
+    """A pending event beyond max_time with no unfinished tasks (e.g. a
+    delayed spawn) ends the run without an exception; the drained-event
+    counter must be added exactly once."""
+
+    def run_with_late_spawn(late):
+        sim = SimExecutor(Topology(2, 1), SchedCoop(), max_time=1.0)
+        job = Job("late")
+
+        def body():
+            yield st.compute(0.01)
+
+        done = sim.spawn(job, body)
+        if late:
+            sim.spawn(job, body, at=5.0)  # never submitted: beyond max_time
+        sim.run()
+        assert done.done
+        return sim.events_processed
+
+    base = run_with_late_spawn(False)
+    assert base > 0
+    assert run_with_late_spawn(True) == base
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_incremental_eevdf_same_sim_stats(seed):
+    """End-to-end: identical SchedStats under RefFair and SchedFair."""
+    rng = random.Random(1000 + seed)
+    n_slots = rng.randint(1, 4)
+    programs = [
+        [(rng.choice(["compute", "sleep", "yield"]), rng.uniform(5e-4, 2e-2))
+         for _ in range(rng.randint(1, 6))]
+        for _ in range(rng.randint(2, 12))
+    ]
+
+    def run_with(policy):
+        sim = SimExecutor(Topology(n_slots, 1), policy, max_time=600.0)
+        jobs = [Job(f"j{i}", nice=5 * (i % 2)) for i in range(2)]
+
+        def body(prog):
+            def gen():
+                for kind, v in prog:
+                    if kind == "compute":
+                        yield st.compute(v)
+                    elif kind == "sleep":
+                        yield st.sleep(v)
+                    else:
+                        yield st.yield_()
+            return gen
+
+        for i, prog in enumerate(programs):
+            sim.spawn(jobs[i % 2], body(prog))
+        s = sim.run()
+        return (s.makespan, s.dispatches, s.migrations, s.preemptions,
+                s.total_run_time, s.total_wait_time, s.tasks_completed)
+
+    assert run_with(RefFair(slice_s=0.003)) == run_with(SchedFair(slice_s=0.003))
+
+
+# --------------------------------------------------------------------------- #
+# SCHED_COOP placement order (§4.1) through the cached neighbor tuples
+# --------------------------------------------------------------------------- #
+def _coop_with_topology(n_slots=8, n_domains=2):
+    topo = Topology(n_slots, n_domains)
+    pol = SchedCoop(quantum=1.0)  # large quantum: no rotation interference
+    pol.attach(SimpleNamespace(topology=topo))
+    return pol, topo
+
+
+def _ready_task(pol, job, last_slot, yielded=False):
+    t = Task(job)
+    t.last_slot = last_slot
+    t._yielded = yielded
+    pol.on_ready(t)
+    return t
+
+
+def test_coop_dispatch_order_affinity_unaffine_domain_anywhere():
+    pol, topo = _coop_with_topology(8, 2)  # domains {0..3} and {4..7}
+    job = Job("order")
+    remote = _ready_task(pol, job, last_slot=6)   # cross-domain for slot 1
+    domain = _ready_task(pol, job, last_slot=3)   # same domain as slot 1
+    fresh = _ready_task(pol, job, last_slot=None)  # unaffine (new work)
+    affine = _ready_task(pol, job, last_slot=1)   # exact affinity
+    assert pol.pick(1) is affine
+    assert pol.pick(1) is fresh
+    assert pol.pick(1) is domain
+    assert pol.pick(1) is remote
+    assert pol.pick(1) is None
+
+
+def test_coop_yielded_task_goes_behind_new_work():
+    pol, _ = _coop_with_topology(4, 1)
+    job = Job("yield-order")
+    spun = _ready_task(pol, job, last_slot=2, yielded=True)  # nosv_yield
+    fresh = _ready_task(pol, job, last_slot=None)
+    # both land in the unaffine FIFO; the yielder arrived first
+    assert pol.pick(0) is spun
+    assert pol.pick(0) is fresh
+
+
+@pytest.mark.parametrize("n_slots,n_domains", [(4, 1), (8, 2), (12, 3)])
+def test_neighbor_tuples_are_distance_ordered(n_slots, n_domains):
+    topo = Topology(n_slots, n_domains)
+    for sid in range(n_slots):
+        order = topo.neighbors_first(sid)
+        assert isinstance(order, tuple)
+        assert order is topo.neighbors_first(sid)  # cached, not rebuilt
+        sids = [s.sid for s in order]
+        assert sorted(sids) == list(range(n_slots))  # a permutation
+        dists = [topo.distance(sid, s.sid) for s in order]
+        assert dists == sorted(dists)  # §4.1: nearest first
+        assert dists[0] == 0 and order[0].sid == sid
+
+
+# --------------------------------------------------------------------------- #
+# framework invariants I1–I4 on random workloads (hypothesis-free port of
+# tests/test_scheduler_props.py)
+# --------------------------------------------------------------------------- #
+def _policy_for(name):
+    return {
+        "coop": lambda: SchedCoop(quantum=0.01),
+        "fair": lambda: SchedFair(slice_s=0.002),
+        "rr": lambda: SchedRR(quantum=0.002),
+    }[name]()
+
+
+@pytest.mark.parametrize("polname", ["coop", "fair", "rr"])
+@pytest.mark.parametrize("seed", range(6))
+def test_invariants_random_workloads(polname, seed):
+    rng = random.Random(2000 + seed)
+    n_slots = rng.randint(1, 4)
+    n_jobs = rng.randint(1, 3)
+    programs = [
+        [(rng.choice(["compute", "crit", "sleep", "yield"]),
+          rng.uniform(5e-4, 1e-2))
+         for _ in range(rng.randint(1, 5))]
+        for _ in range(rng.randint(1, 10))
+    ]
+    policy = _policy_for(polname)
+    sim = SimExecutor(Topology(n_slots, 1), policy, max_time=600.0)
+    jobs = [Job(f"j{i}") for i in range(n_jobs)]
+    mutex = st.SimMutex()
+    cs = {"cur": 0, "max": 0}
+    requested = 0.0
+
+    def body(prog):
+        def gen():
+            for kind, v in prog:
+                if kind == "compute":
+                    yield st.compute(v)
+                elif kind == "crit":
+                    yield st.lock(mutex)
+                    cs["cur"] += 1
+                    cs["max"] = max(cs["max"], cs["cur"])
+                    yield st.compute(v)
+                    cs["cur"] -= 1
+                    yield st.unlock(mutex)
+                elif kind == "sleep":
+                    yield st.sleep(v)
+                else:
+                    yield st.yield_()
+        return gen
+
+    tasks = []
+    for i, prog in enumerate(programs):
+        requested += sum(v for k, v in prog if k in ("compute", "crit"))
+        tasks.append(sim.spawn(jobs[i % n_jobs], body(prog)))
+    stats = sim.run()
+
+    assert all(t.done for t in tasks)  # P1 completion
+    if polname == "coop":
+        assert stats.preemptions == 0  # I2
+    overhead = stats.dispatches * (
+        sim.costs.ctx_switch + sim.costs.dispatch_latency
+        + sim.costs.migration_cross
+    )
+    assert stats.total_run_time >= requested - 1e-9  # P3
+    assert stats.total_run_time <= requested + overhead + 1e-9
+    assert cs["max"] <= 1  # P4 mutual exclusion
+    assert stats.slot_busy_fraction <= 1.0 + 1e-6  # I1 in accounting
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_simulation_deterministic(seed):
+    """P5: two identical runs produce identical stats (the event engine's
+    tuple fast path must not depend on iteration order side effects)."""
+    rng = random.Random(3000 + seed)
+    n_slots = rng.randint(1, 4)
+    programs = [
+        [(rng.choice(["compute", "sleep", "yield"]), rng.uniform(5e-4, 1e-2))
+         for _ in range(rng.randint(1, 5))]
+        for _ in range(rng.randint(1, 10))
+    ]
+
+    def run_once():
+        sim = SimExecutor(Topology(n_slots, 1), SchedCoop(), max_time=600.0)
+        jobs = [Job(f"j{i}") for i in range(2)]
+
+        def body(prog):
+            def gen():
+                for kind, v in prog:
+                    if kind == "compute":
+                        yield st.compute(v)
+                    elif kind == "sleep":
+                        yield st.sleep(v)
+                    else:
+                        yield st.yield_()
+            return gen
+
+        for i, prog in enumerate(programs):
+            sim.spawn(jobs[i % 2], body(prog))
+        s = sim.run()
+        return (s.makespan, s.dispatches, s.migrations, s.tasks_completed,
+                sim.events_processed)
+
+    assert run_once() == run_once()
+
+
+def test_sched_ops_bench_smoke(tmp_path):
+    """The perf-tracking microbench runs end-to-end and writes its JSON."""
+    from benchmarks.sched_ops import main
+
+    out = tmp_path / "bench.json"
+    assert main(["--smoke", "--out", str(out)]) == 0
+    import json
+
+    payload = json.loads(out.read_text())
+    r = payload["results"]
+    assert r["policy.fair.pick_cycle"]["ops_per_sec"] > 0
+    assert r["sim.yield_churn"]["events_per_sec"] > 0

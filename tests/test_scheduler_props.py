@@ -11,8 +11,13 @@ under every policy; we assert the framework invariants:
   P5. Determinism: the sim is reproducible (same seed -> same makespan).
 """
 
-import math
+import pytest
 
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; deterministic seeded equivalents run "
+    "in tests/test_sched_fastpath.py",
+)
 from hypothesis import given, settings, strategies as hst
 
 from repro.core import simtask as st
