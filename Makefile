@@ -1,10 +1,12 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test test-all bench-sched-ops
+.PHONY: check test test-all bench-sched-ops bench-colocation
 
 ## check: the fast CI gate — clean-collecting tier-1 tests (slow ones are
-## deselected via pyproject addopts) + the sched-ops microbench in smoke mode
+## deselected via pyproject addopts) + the sched-ops/arbiter microbench in
+## smoke mode, perf-gated: SCHED_COOP/SCHED_FAIR pick-cycle throughput must
+## stay within 30% of the committed BENCH_sched_ops.json baseline
 check: test bench-sched-ops
 
 test:
@@ -14,4 +16,8 @@ test-all:
 	$(PY) -m pytest -q -m ""
 
 bench-sched-ops:
-	$(PY) -m benchmarks.sched_ops --smoke --out BENCH_sched_ops.smoke.json
+	$(PY) -m benchmarks.sched_ops --smoke --out BENCH_sched_ops.smoke.json \
+		--gate BENCH_sched_ops.json
+
+bench-colocation:
+	$(PY) -m benchmarks.colocation

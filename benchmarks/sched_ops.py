@@ -5,7 +5,14 @@ Measures, in isolation from any workload semantics:
   * **scheduler-ops/sec per policy**: one "op" is a full
     ``pick -> on_run -> on_stop -> on_ready`` cycle against a ready pool
     held at a constant size (default 256 tasks, the oversubscription
-    regime the paper's Fig. 3 heatmap stresses);
+    regime the paper's Fig. 3 heatmap stresses). Single-policy cycles run
+    through the ``SlotArbiter`` front, so the numbers cover the two-level
+    fast path (which rebinds to the bare policy methods — the PR 1
+    baseline stays directly comparable);
+  * **arbiter cycle** (``policy.arbiter2.pick_cycle``): the same churn
+    against a *two-group* arbiter (SCHED_COOP + SCHED_FAIR co-located,
+    equal shares) with slots held occupied, i.e. the multi-runtime
+    lease-arbitration path;
   * **sim-events/sec**: events drained per wall second by ``SimExecutor``
     on two representative event mixes (cooperative yield churn and a
     preemptive tick-heavy compute load).
@@ -14,6 +21,13 @@ Run it from the repo root:
 
     PYTHONPATH=src python -m benchmarks.sched_ops            # full
     PYTHONPATH=src python -m benchmarks.sched_ops --smoke    # CI smoke
+    PYTHONPATH=src python -m benchmarks.sched_ops --smoke \
+        --gate BENCH_sched_ops.json                          # CI perf gate
+
+``--gate BASELINE.json`` re-runs the SCHED_FAIR/SCHED_COOP pick-cycle
+benches at the baseline's pool size and exits non-zero if either drops
+more than ``--gate-drop`` (default 30%) below the committed numbers —
+``make check`` wires this up so two-level regressions fail CI.
 
 Writes ``BENCH_sched_ops.json`` (override with ``--out``) so the perf
 trajectory is machine-tracked PR over PR. Numbers are wall-clock and thus
@@ -27,8 +41,10 @@ import json
 import platform
 import sys
 import time
+from collections import deque
 from types import SimpleNamespace
 
+from repro.core.arbiter import SlotArbiter
 from repro.core.policies import SchedCoop, SchedFair, SchedRR
 from repro.core.policies.base import StopReason
 from repro.core.task import Job, Task
@@ -36,19 +52,29 @@ from repro.core.topology import Topology
 
 MIN_SAMPLE_S = 0.5  # keep timing chunks above this to dampen jitter
 
+GATED_KEYS = ("policy.fair.pick_cycle", "policy.coop.pick_cycle")
 
-def _ops_per_sec(cycle, iters_hint: int) -> tuple[float, int]:
-    """Run ``cycle(i)`` repeatedly until MIN_SAMPLE_S elapsed; return
-    (ops/sec, total iterations)."""
+
+def _ops_per_sec(cycle, iters_hint: int, repeat: int = 1) -> tuple[float, int]:
+    """Run ``cycle(i)`` until MIN_SAMPLE_S elapsed, ``repeat`` samples;
+    return (best ops/sec, total iterations). The cycle state is steady, so
+    run-to-run spread is host noise and the max is the least-noisy
+    estimate (same reasoning as bench_sim_events)."""
+    best = 0.0
     done = 0
-    t0 = time.perf_counter()
-    while True:
-        for _ in range(iters_hint):
-            cycle(done)
-            done += 1
-        dt = time.perf_counter() - t0
-        if dt >= MIN_SAMPLE_S:
-            return done / dt, done
+    for _ in range(max(1, repeat)):
+        sample_done = 0
+        t0 = time.perf_counter()
+        while True:
+            for _ in range(iters_hint):
+                cycle(done)
+                done += 1
+                sample_done += 1
+            dt = time.perf_counter() - t0
+            if dt >= MIN_SAMPLE_S:
+                break
+        best = max(best, sample_done / dt)
+    return best, done
 
 
 def _make_policy(name: str):
@@ -62,34 +88,79 @@ def _make_policy(name: str):
 
 
 def bench_policy(name: str, *, n_ready: int, n_slots: int,
-                 iters_hint: int) -> dict:
-    """Steady-state pick/requeue churn with the pool held at ``n_ready``."""
+                 iters_hint: int, repeat: int = 1) -> dict:
+    """Steady-state pick/requeue churn with the pool held at ``n_ready``,
+    driven through the SlotArbiter front (single-group fast path)."""
     topo = Topology(n_slots, 2 if n_slots % 2 == 0 else 1)
     policy = _make_policy(name)
-    # policies only need `.topology` off the scheduler at pick time
-    policy.attach(SimpleNamespace(topology=topo))
+    front = SlotArbiter(policy)
+    # the arbiter/policies only need `.topology` off the scheduler
+    front.attach(SimpleNamespace(topology=topo))
     jobs = [Job(f"bench-j{i}") for i in range(4)]
     tasks = [Task(jobs[i % len(jobs)], name=f"b{i}") for i in range(n_ready)]
     for i, t in enumerate(tasks):
         # mix of affine / unaffine tasks, spread over slots like a real pool
         t.last_slot = None if i % 7 == 0 else i % n_slots
     for t in tasks:
-        policy.on_ready(t)
+        front.on_ready(t)
 
     state = {"now": 0.0}
 
     def cycle(i: int) -> None:
         slot = i % n_slots
-        task = policy.pick(slot)
+        task = front.pick(slot)
         now = state["now"]
-        policy.on_run(task, slot, now)
+        front.on_run(task, slot, now)
         state["now"] = now = now + 0.0005
         task.last_slot = slot
-        policy.on_stop(task, slot, now, 0.0005, StopReason.BLOCK)
-        policy.on_ready(task)
+        front.on_stop(task, slot, now, 0.0005, StopReason.BLOCK)
+        front.on_ready(task)
 
-    ops, iters = _ops_per_sec(cycle, iters_hint)
-    assert policy.ready_count() == n_ready, "pool size drifted"
+    ops, iters = _ops_per_sec(cycle, iters_hint, repeat=repeat)
+    assert front.ready_count() == n_ready, "pool size drifted"
+    return {"ops_per_sec": ops, "iterations": iters,
+            "n_ready": n_ready, "n_slots": n_slots}
+
+
+def bench_arbiter_cycle(*, n_ready: int, n_slots: int,
+                        iters_hint: int, repeat: int = 1) -> dict:
+    """Two-level pick churn: a SCHED_COOP job co-located with a SCHED_FAIR
+    job at equal shares, slots held occupied so lease accounting (in_use /
+    quota deficits) is exercised on every grant."""
+    topo = Topology(n_slots, 2 if n_slots % 2 == 0 else 1)
+    front = SlotArbiter(SchedCoop(quantum=0.02))
+    front.attach(SimpleNamespace(topology=topo))
+    job_a = Job("bench-coop")
+    job_b = Job("bench-fair")
+    front.attach_job(job_a, policy=SchedCoop(quantum=0.02), share=1.0)
+    front.attach_job(job_b, policy=SchedFair(slice_s=0.003), share=1.0)
+    tasks = [Task(job_a if i % 2 == 0 else job_b, name=f"a{i}")
+             for i in range(n_ready)]
+    for i, t in enumerate(tasks):
+        t.last_slot = None if i % 7 == 0 else i % n_slots
+    for t in tasks:
+        front.on_ready(t)
+
+    state = {"now": 0.0}
+    running: deque = deque()  # (task, slot) ring keeps all slots occupied
+
+    def cycle(i: int) -> None:
+        now = state["now"]
+        if len(running) == n_slots:
+            task, slot = running.popleft()
+            task.last_slot = slot
+            front.on_stop(task, slot, now, 0.0005, StopReason.BLOCK)
+            front.on_ready(task)
+        slot = i % n_slots
+        task = front.pick(slot)
+        front.on_run(task, slot, now)
+        state["now"] = now + 0.0005
+        running.append((task, slot))
+
+    ops, iters = _ops_per_sec(cycle, iters_hint, repeat=repeat)
+    assert front.ready_count() + len(running) == n_ready, "pool drifted"
+    groups = front.groups()
+    assert len(groups) == 3 and front.multi, "two-level path not exercised"
     return {"ops_per_sec": ops, "iterations": iters,
             "n_ready": n_ready, "n_slots": n_slots}
 
@@ -166,6 +237,29 @@ def _bench_sim_events_once(kind: str, *, scale: float) -> dict:
     }
 
 
+def check_gate(results: dict, baseline_path: str, max_drop: float) -> list[str]:
+    """Compare the gated pick-cycle metrics against a committed baseline;
+    returns a list of failure messages (empty = gate passed)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)["results"]
+    failures = []
+    for key in GATED_KEYS:
+        base = baseline.get(key)
+        cur = results.get(key)
+        if base is None or cur is None:
+            continue
+        floor = (1.0 - max_drop) * base["ops_per_sec"]
+        verdict = "ok" if cur["ops_per_sec"] >= floor else "FAIL"
+        print(f"gate {key}: {cur['ops_per_sec']:,.0f} ops/s vs baseline "
+              f"{base['ops_per_sec']:,.0f} (floor {floor:,.0f}) {verdict}")
+        if cur["ops_per_sec"] < floor:
+            failures.append(
+                f"{key} dropped >{max_drop:.0%}: {cur['ops_per_sec']:,.0f} "
+                f"< {floor:,.0f} ops/s (baseline {base['ops_per_sec']:,.0f})"
+            )
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--out", default="BENCH_sched_ops.json")
@@ -174,19 +268,46 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=16)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes; checks the bench runs, not the perf")
+    ap.add_argument("--gate", metavar="BASELINE_JSON", default=None,
+                    help="fail (exit 1) if SCHED_FAIR/SCHED_COOP pick-cycle "
+                         "throughput drops more than --gate-drop below this "
+                         "baseline (gated benches run at the baseline's "
+                         "pool size even with --smoke)")
+    ap.add_argument("--gate-drop", type=float, default=0.30,
+                    help="max allowed fractional drop vs the baseline")
     args = ap.parse_args(argv)
 
     scale = 0.25 if args.smoke else 1.0
     n_ready = max(16, int(args.ready * (0.25 if args.smoke else 1.0)))
     iters_hint = 50 if args.smoke else 500
 
+    gate_baseline = None
+    if args.gate:
+        with open(args.gate) as f:
+            gate_baseline = json.load(f)["results"]
+
+    repeat = 1 if args.smoke else 3
     results: dict = {}
     for pol in ("fair", "coop", "rr"):
-        r = bench_policy(pol, n_ready=n_ready, n_slots=args.slots,
-                         iters_hint=iters_hint)
-        results[f"policy.{pol}.pick_cycle"] = r
-        print(f"policy.{pol}.pick_cycle: {r['ops_per_sec']:,.0f} ops/s "
+        key = f"policy.{pol}.pick_cycle"
+        pol_ready, pol_iters, pol_repeat = n_ready, iters_hint, repeat
+        if gate_baseline is not None and key in GATED_KEYS:
+            # gated benches are measured at the baseline's pool size with
+            # best-of-3 sampling even in smoke mode: the gate compares
+            # best-of-N against best-of-N on a noisy shared host
+            base = gate_baseline.get(key)
+            if base is not None:
+                pol_ready, pol_iters, pol_repeat = base["n_ready"], 500, 3
+        r = bench_policy(pol, n_ready=pol_ready, n_slots=args.slots,
+                         iters_hint=pol_iters, repeat=pol_repeat)
+        results[key] = r
+        print(f"{key}: {r['ops_per_sec']:,.0f} ops/s "
               f"(ready={r['n_ready']})")
+    r = bench_arbiter_cycle(n_ready=n_ready, n_slots=args.slots,
+                            iters_hint=iters_hint, repeat=repeat)
+    results["policy.arbiter2.pick_cycle"] = r
+    print(f"policy.arbiter2.pick_cycle: {r['ops_per_sec']:,.0f} ops/s "
+          f"(ready={r['n_ready']}, coop+fair two-level)")
     for kind in ("yield_churn", "fair_ticks"):
         r = bench_sim_events(kind, scale=scale,
                              repeat=1 if args.smoke else 2)
@@ -205,6 +326,14 @@ def main(argv=None) -> int:
         json.dump(payload, f, indent=2)
         f.write("\n")
     print(f"wrote {args.out}")
+
+    if args.gate:
+        failures = check_gate(results, args.gate, args.gate_drop)
+        if failures:
+            for msg in failures:
+                print(f"PERF GATE FAILURE: {msg}", file=sys.stderr)
+            return 1
+        print("perf gate passed")
     return 0
 
 

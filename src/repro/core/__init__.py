@@ -8,6 +8,10 @@ A centralized, multi-job, user-space scheduling framework:
 * ``Task``/``Job``        — schedulable work units owned by jobs (processes).
 * ``Scheduler``           — the central scheduler: one running task per slot,
   worker swaps at blocking points only, pluggable policy.
+* ``SlotArbiter``/``SlotLease`` — the job level of the two-level design:
+  nice-weighted proportional slot leases with work-conserving borrowing,
+  elastic resize, and attach/detach of jobs running *different* intra-job
+  policies side by side (SCHED_COOP co-located with SCHED_FAIR).
 * ``policies``            — SCHED_COOP (the paper's default), SCHED_FAIR
   (EEVDF-like preemptive stand-in for Linux), SCHED_RR.
 * ``sync``                — cooperative synchronization primitives with
@@ -22,6 +26,7 @@ A centralized, multi-job, user-space scheduling framework:
 
 from repro.core.task import Task, Job, TaskState
 from repro.core.topology import Topology, Slot
+from repro.core.arbiter import ArbiterError, SlotArbiter, SlotLease
 from repro.core.scheduler import Scheduler
 from repro.core.policies import SchedCoop, SchedFair, SchedRR, Policy
 from repro.core import sync
@@ -34,6 +39,9 @@ __all__ = [
     "Topology",
     "Slot",
     "Scheduler",
+    "SlotArbiter",
+    "SlotLease",
+    "ArbiterError",
     "Policy",
     "SchedCoop",
     "SchedFair",

@@ -1,0 +1,449 @@
+"""Job-level slot arbitration — the top half of the two-level scheduler.
+
+The paper coordinates *multi-runtime and multi-process* workloads through
+one shared user-space scheduler instance. A single flat policy cannot
+express that: a co-located BLAS job wants SCHED_COOP semantics while a
+preemptive baseline job wants SCHED_FAIR, and the co-location wins come
+from *job-level capacity arbitration*, not from intra-job pick order.
+
+``SlotArbiter`` is that job level. It sits between the ``Scheduler`` (which
+owns slots, invariants and scheduling points) and one *intra-job policy per
+policy group*:
+
+* every attached job holds a ``SlotLease`` — a nice-weighted proportional
+  share of the slots, materialized as an integer ``quota`` by
+  largest-remainder apportionment;
+* leases are **work-conserving**: a job with ready tasks may *borrow* slots
+  beyond its quota, but only when no sibling group with spare lease has
+  ready work (invariant I5, tested in tests/test_arbiter.py);
+* leases are **elastic**: ``lease.resize(share)`` regrows or reclaims
+  capacity at runtime (the job-level generalization of
+  ``repro.launch.elastic`` — grants take effect immediately via an idle
+  fill, reclaims at the next scheduling point, or at the next preemption
+  tick for preemptive intra-job policies);
+* jobs attach and detach dynamically (the ``nosv_attach`` analogue): a
+  detached job's blocked tasks may later re-register transparently through
+  the default group.
+
+Invariant I5 (grant rule): *a job is never granted a slot beyond its
+current lease while a sibling group has ready tasks and spare lease*. The
+arbiter enforces it structurally — borrowing grants are only reached after
+every under-quota group has declined the slot.
+
+Fast path: with a single policy group (the common single-runtime case) the
+arbiter rebinds its scheduling-point entry points to the default policy's
+bound methods, so the two-level design costs nothing until a second
+runtime actually attaches.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional
+
+from repro.core.policies.base import Policy, StopReason
+from repro.core.policies.sched_fair import nice_to_weight
+from repro.core.task import Job, Task, TaskState
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.scheduler import Scheduler
+
+
+class ArbiterError(RuntimeError):
+    pass
+
+
+class ArbiterGroup:
+    """One intra-job policy instance plus the jobs it multiplexes.
+
+    Jobs attached *with* a dedicated policy form a one-job group; jobs
+    registered without one share the default group (and its policy does its
+    own intra-group multiplexing, e.g. SCHED_COOP's job rotation). Lease
+    enforcement is at group granularity: ``quota``/``in_use`` aggregate the
+    member leases.
+    """
+
+    __slots__ = ("policy", "jids", "quota", "in_use", "dedicated")
+
+    def __init__(self, policy: Policy, *, dedicated: bool):
+        self.policy = policy
+        self.jids: set[int] = set()
+        self.quota = 0
+        self.in_use = 0
+        self.dedicated = dedicated
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"ArbiterGroup({self.policy.name} jobs={len(self.jids)} "
+                f"{self.in_use}/{self.quota})")
+
+
+class SlotLease:
+    """A job's proportional claim on the slot pool.
+
+    ``share`` is a relative weight (defaults to the nice-derived weight, so
+    the paper's gateway-nice-0 / server-nice-20 setup maps directly onto
+    leases); ``quota`` is the integer slot entitlement the arbiter derives
+    from it; ``in_use`` counts the job's currently running tasks.
+    """
+
+    __slots__ = ("job", "arbiter", "group", "share", "quota", "in_use")
+
+    def __init__(self, job: Job, arbiter: "SlotArbiter", group: ArbiterGroup,
+                 share: float):
+        self.job = job
+        self.arbiter = arbiter
+        self.group = group
+        self.share = share
+        self.quota = 0
+        self.in_use = 0
+
+    def resize(self, share: float) -> "SlotLease":
+        """Elastic grant/reclaim: change this job's share at runtime.
+
+        Growing takes effect immediately (idle slots are refilled under the
+        new quotas); shrinking is reclaimed at the job's next scheduling
+        point — or next preemption tick when its policy is preemptive (the
+        lease-revocation scheduling point). SCHED_COOP jobs are never
+        preempted for reclaim (I2).
+        """
+        self.arbiter._resize(self, share)
+        return self
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"SlotLease({self.job.name} share={self.share:.1f} "
+                f"{self.in_use}/{self.quota})")
+
+
+def _job_share(job: Job, share: Optional[float]) -> float:
+    if share is not None:
+        s = float(share)
+    elif job.share is not None:
+        s = float(job.share)
+    else:
+        s = nice_to_weight(job.nice)
+    if s < 0:
+        raise ArbiterError(f"negative share {s} for {job}")
+    return s
+
+
+class SlotArbiter:
+    """Two-level scheduler front: routes scheduling points to per-group
+    intra-job policies under lease arbitration.
+
+    The ``Scheduler`` drives it through the same entry points as a flat
+    ``Policy`` (pick / on_ready / on_run / on_stop / should_preempt /
+    has_ready / ready_count); job lifecycle goes through ``attach_job`` /
+    ``detach_job`` / ``on_job``.
+    """
+
+    def __init__(self, default_policy: Policy):
+        self.sched: Optional["Scheduler"] = None
+        self._default = default_policy
+        self._default_group = ArbiterGroup(default_policy, dedicated=False)
+        self._groups: list[ArbiterGroup] = [self._default_group]
+        self._leases: dict[int, SlotLease] = {}  # jid -> lease, attach order
+        self._n_slots = 0
+        self._bind_single()
+
+    # ------------------------------------------------------------------ #
+    # scheduler binding (Policy.attach shape)
+    # ------------------------------------------------------------------ #
+    def attach(self, sched) -> None:
+        self.sched = sched
+        self._n_slots = sched.topology.n_slots
+        self._default.attach(sched)
+        self._recompute_quotas()
+
+    @property
+    def default_policy(self) -> Policy:
+        return self._default
+
+    @property
+    def multi(self) -> bool:
+        return len(self._groups) > 1
+
+    def groups(self) -> tuple[ArbiterGroup, ...]:
+        return tuple(self._groups)
+
+    def leases(self) -> tuple[SlotLease, ...]:
+        return tuple(self._leases.values())
+
+    def describe(self) -> str:
+        if not self.multi:
+            return self._default.name
+        names = "+".join(g.policy.name for g in self._groups if g.jids)
+        return f"arbiter[{names}]"
+
+    def policy_of(self, job: Job) -> Policy:
+        lease = job.lease
+        if lease is not None and lease.arbiter is self:
+            return lease.group.policy
+        return self._default
+
+    def lease_of(self, job: Job) -> Optional[SlotLease]:
+        lease = job.lease
+        return lease if lease is not None and lease.arbiter is self else None
+
+    def lease_snapshot(self) -> dict:
+        return {
+            l.job.name: {
+                "share": l.share,
+                "quota": l.quota,
+                "in_use": l.in_use,
+                "policy": l.group.policy.name,
+            }
+            for l in self._leases.values()
+        }
+
+    # ------------------------------------------------------------------ #
+    # job lifecycle (nosv_attach / nosv_detach analogues)
+    # ------------------------------------------------------------------ #
+    def on_job(self, job: Job) -> None:
+        """Implicit registration: unknown jobs join the default group."""
+        if job.jid not in self._leases:
+            self.attach_job(job)
+
+    def attach_job(self, job: Job, *, policy: Optional[Policy] = None,
+                   share: Optional[float] = None) -> SlotLease:
+        """Register ``job``, optionally with its own intra-job policy.
+
+        With ``policy=None`` the job joins the shared default group (the
+        flat pre-arbiter behaviour). With a dedicated policy the job forms
+        its own group — this is how one SCHED_COOP job co-locates with a
+        SCHED_FAIR sibling. A dedicated attach requires the job quiescent
+        (no READY/RUNNING tasks): queued work cannot be migrated between
+        policies; BLOCKED tasks are fine and will route to the new policy
+        on wakeup. A quiescent job that was implicitly registered through
+        the default group is *promoted* — detached from it first.
+        """
+        existing = self._leases.get(job.jid)
+        if existing is not None:
+            if policy is None or existing.group.dedicated:
+                raise ArbiterError(f"{job} already attached")
+            # promote an implicitly registered job out of the default group
+            self.detach_job(job)  # includes the quiescence check
+        if policy is not None:
+            self._require_quiescent(job, "attach with a dedicated policy")
+            if policy is self._default or any(
+                policy is g.policy for g in self._groups
+            ):
+                raise ArbiterError(
+                    "dedicated policy instance is already in use by another "
+                    "group; pass a fresh instance per job"
+                )
+            if self.sched is not None:
+                policy.attach(self.sched)
+            policy.on_job(job)
+            group = ArbiterGroup(policy, dedicated=True)
+            self._groups.append(group)
+        else:
+            group = self._default_group
+            self._default.on_job(job)
+        group.jids.add(job.jid)
+        lease = SlotLease(job, self, group, _job_share(job, share))
+        self._leases[job.jid] = lease
+        job.lease = lease
+        self._rebalance()
+        return lease
+
+    def detach_job(self, job: Job) -> None:
+        """Unregister ``job`` and release its lease (dynamic re-registration:
+        a later submit — or a blocked task waking up — re-attaches the job
+        to the default group)."""
+        lease = self._leases.get(job.jid)
+        if lease is None:
+            raise ArbiterError(f"{job} is not attached")
+        self._require_quiescent(job, "detach")
+        del self._leases[job.jid]
+        job.lease = None
+        group = lease.group
+        group.jids.discard(job.jid)
+        if group.dedicated:
+            self._groups.remove(group)
+        else:
+            self._default.on_job_detach(job)
+        self._rebalance()
+
+    def _require_quiescent(self, job: Job, what: str) -> None:
+        for t in job.tasks:
+            if t.state in (TaskState.READY, TaskState.RUNNING):
+                raise ArbiterError(
+                    f"cannot {what}: {job} still has {t.state.value} task {t}"
+                )
+
+    # ------------------------------------------------------------------ #
+    # lease bookkeeping
+    # ------------------------------------------------------------------ #
+    def _resize(self, lease: SlotLease, share: float) -> None:
+        if lease.arbiter is not self or lease.job.jid not in self._leases:
+            raise ArbiterError(f"{lease} is no longer attached")
+        share = float(share)
+        if share < 0:
+            raise ArbiterError(f"negative share {share}")
+        sched = self.sched
+        lock = getattr(sched, "_lock", None)
+        if lock is not None:
+            with lock:
+                lease.share = share
+                self._recompute_quotas()
+                # grant path: newly entitled capacity admits queued work now
+                sched._fill_idle_slots(sched.clock())
+        else:
+            lease.share = share
+            self._recompute_quotas()
+
+    def _rebalance(self) -> None:
+        self._recompute_quotas()
+        self._resync_in_use()
+        if self.multi:
+            self._bind_multi()
+        else:
+            self._bind_single()
+
+    def _recompute_quotas(self) -> None:
+        """Largest-remainder apportionment of the slot pool by share."""
+        n = self._n_slots
+        leases = list(self._leases.values())
+        for g in self._groups:
+            g.quota = 0
+        if not leases or n <= 0:
+            return
+        total = sum(l.share for l in leases)
+        if total <= 0.0:
+            # all-zero shares: fall back to equal entitlement
+            total = float(len(leases))
+            exacts = [(n / total, l) for l in leases]
+        else:
+            exacts = [(n * l.share / total, l) for l in leases]
+        granted = 0
+        remainders = []
+        for i, (exact, lease) in enumerate(exacts):
+            q = int(exact)
+            lease.quota = q
+            granted += q
+            remainders.append((-(exact - q), i, lease))
+        remainders.sort()
+        for k in range(n - granted):
+            remainders[k][2].quota += 1
+        for lease in leases:
+            lease.group.quota += lease.quota
+
+    def _resync_in_use(self) -> None:
+        """Recount running tasks per lease/group from the slot table
+        (attach/detach can happen while sibling jobs are mid-flight)."""
+        for l in self._leases.values():
+            l.in_use = 0
+        for g in self._groups:
+            g.in_use = 0
+        slots = getattr(self.sched, "_slots", None)
+        if not slots:
+            return
+        for st in slots:
+            t = st.running
+            if t is None:
+                continue
+            lease = self._leases.get(t.job.jid)
+            if lease is not None:
+                lease.in_use += 1
+                lease.group.in_use += 1
+
+    # ------------------------------------------------------------------ #
+    # scheduling-point routing
+    # ------------------------------------------------------------------ #
+    def _bind_single(self) -> None:
+        """Single policy group: rebind the hot entry points straight to the
+        default policy's bound methods — near-zero two-level overhead (the
+        PR 1 fast-path numbers are gated on this, benchmarks/sched_ops.py).
+        ``on_ready`` keeps a thin wrapper: it is the wakeup path, so it must
+        re-register detached jobs whose BLOCKED tasks resurface — otherwise
+        a leaseless task could reach a later multi-group transition."""
+        p = self._default
+        self.pick = p.pick
+        self.on_ready = self._on_ready_single
+        self.on_run = p.on_run
+        self.on_stop = p.on_stop
+        self.should_preempt = p.should_preempt
+        self.has_ready = p.has_ready
+        self.ready_count = p.ready_count
+
+    def _bind_multi(self) -> None:
+        self.pick = self._pick_multi
+        self.on_ready = self._on_ready_multi
+        self.on_run = self._on_run_multi
+        self.on_stop = self._on_stop_multi
+        self.should_preempt = self._should_preempt_multi
+        self.has_ready = self._has_ready_multi
+        self.ready_count = self._ready_count_multi
+
+    def _pick_multi(self, slot_id: int) -> Optional[Task]:
+        """Grant the slot under the lease rule (I5).
+
+        Candidate order: groups holding spare lease first (largest spare
+        wins, ties by attach order), then — work-conserving borrowing —
+        groups already at/over quota, least-over first. A borrowing grant
+        is therefore only reachable after every spare-lease group declined,
+        which is exactly the I5 grant rule.
+        """
+        candidates = []
+        for i, g in enumerate(self._groups):
+            if g.policy.has_ready():
+                candidates.append((g.in_use - g.quota, i, g))
+        if not candidates:
+            return None
+        candidates.sort()
+        for _, _, g in candidates:
+            task = g.policy.pick(slot_id)
+            if task is not None:
+                return task
+        return None
+
+    def _on_ready_single(self, task: Task) -> None:
+        lease = task.job.lease
+        if lease is None or lease.arbiter is not self:
+            self.on_job(task.job)  # dynamic re-registration on wakeup
+        self._default.on_ready(task)
+
+    def _on_ready_multi(self, task: Task) -> None:
+        job = task.job
+        lease = job.lease
+        if lease is None or lease.arbiter is not self:
+            self.on_job(job)  # dynamic re-registration (detached job woke up)
+            lease = job.lease
+        lease.group.policy.on_ready(task)
+
+    def _on_run_multi(self, task: Task, slot_id: int, now: float) -> None:
+        lease = task.job.lease
+        lease.in_use += 1
+        lease.group.in_use += 1
+        lease.group.policy.on_run(task, slot_id, now)
+
+    def _on_stop_multi(self, task: Task, slot_id: int, now: float,
+                       elapsed: float, reason: StopReason) -> None:
+        lease = task.job.lease
+        lease.in_use -= 1
+        lease.group.in_use -= 1
+        lease.group.policy.on_stop(task, slot_id, now, elapsed, reason)
+
+    def _should_preempt_multi(self, task: Task, slot_id: int,
+                              now: float) -> bool:
+        group = task.job.lease.group
+        policy = group.policy
+        if not policy.preemptive:
+            return False  # I2: cooperative jobs are never preempted
+        if policy.should_preempt(task, slot_id, now):
+            return True
+        # lease-revocation scheduling point: running beyond quota while a
+        # sibling group holds spare lease and ready work
+        if group.in_use > group.quota:
+            for h in self._groups:
+                if h is not group and h.in_use < h.quota and h.policy.has_ready():
+                    return True
+        return False
+
+    def _has_ready_multi(self) -> bool:
+        for g in self._groups:
+            if g.policy.has_ready():
+                return True
+        return False
+
+    def _ready_count_multi(self) -> int:
+        return sum(g.policy.ready_count() for g in self._groups)

@@ -132,6 +132,16 @@ class SimExecutor:
             self._post(at, lambda: self._submit(task))
         return task
 
+    def attach(self, job: Job, *, policy: Optional[Policy] = None,
+               share: Optional[float] = None):
+        """nosv_attach: register ``job`` with an optional dedicated
+        intra-job policy + slot share; returns its ``SlotLease``."""
+        return self.sched.attach_job(job, policy=policy, share=share)
+
+    def detach(self, job: Job) -> None:
+        """nosv_detach: unregister a quiescent job, releasing its lease."""
+        self.sched.detach_job(job)
+
     def run(self, *, until: Optional[float] = None) -> SchedStats:
         """Drain all events (or run until virtual time ``until``)."""
         limit = until if until is not None else self.max_time
@@ -250,7 +260,7 @@ class SimExecutor:
             delay += self.costs.cache_refill * scale
         self._slot_last[slot_id] = task.tid
         self._post_ev(self._now + delay, _EV_RESUME, task, slot_id, epoch)
-        self._arm_tick(slot_id)
+        self._arm_tick(slot_id, task)
 
     def _valid(self, task: Task, slot_id: int, epoch: int) -> bool:
         return (
@@ -494,18 +504,25 @@ class SimExecutor:
         self.sched.block(task)
 
     # -- preemption ticks -------------------------------------------------- #
-    def _arm_tick(self, slot_id: int) -> None:
-        pol = self.sched.policy
-        if not pol.preemptive or pol.tick_interval is None:
-            return
+    def _arm_tick(self, slot_id: int, task: Optional[Task] = None) -> None:
+        """Arm a preemption tick for the task (about to be) running on the
+        slot. Per-job policies make this per-task: a SCHED_COOP job's tasks
+        never arm ticks even when a co-located job is preemptive."""
         if slot_id in self._tick_armed:
+            return
+        if task is None:
+            task = self.sched.running_on(slot_id)
+            if task is None:
+                return  # armed again on next dispatch
+        pol = self.sched.policy_of(task.job)
+        if not pol.preemptive or pol.tick_interval is None:
             return
         self._tick_armed.add(slot_id)
         self._post_ev(self._now + pol.tick_interval, _EV_TICK, slot_id)
 
     def _tick(self, slot_id: int) -> None:
         self._tick_armed.discard(slot_id)
-        running = self.sched.running_tasks()[slot_id]
+        running = self.sched.running_on(slot_id)
         if running is None:
             return  # re-armed on next dispatch
         if self.sched.tick(slot_id):

@@ -42,6 +42,10 @@ class Policy:
     def on_job(self, job: "Job") -> None:
         """A job (process) registered with the scheduler."""
 
+    def on_job_detach(self, job: "Job") -> None:
+        """A job unregistered (arbiter detach). The job is quiescent: no
+        READY/RUNNING tasks remain, so per-job queues are empty."""
+
     # -- scheduling points ---------------------------------------------- #
     def on_ready(self, task: "Task") -> None:
         raise NotImplementedError

@@ -90,6 +90,19 @@ class SchedCoop(Policy):
             if self._current_jid is None:
                 self._current_jid = job.jid
 
+    def on_job_detach(self, job: Job) -> None:
+        jq = self._jobs.pop(job.jid, None)
+        if jq is None:
+            return
+        if jq.size:  # arbiter guarantees quiescence; guard anyway
+            self._jobs[job.jid] = jq
+            raise ValueError(f"detach of {job} with {jq.size} queued tasks")
+        self._jid_list.remove(job.jid)
+        self._jid_pos = {jid: i for i, jid in enumerate(self._jid_list)}
+        if self._current_jid == job.jid:
+            self._current_jid = self._jid_list[0] if self._jid_list else None
+            self._quantum_used = 0.0
+
     # -- queueing --------------------------------------------------------- #
     def on_ready(self, task: Task) -> None:
         self.on_job(task.job)

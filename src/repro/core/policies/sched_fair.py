@@ -184,6 +184,12 @@ class SchedFair(Policy):
         self._wsum = wsum
         self._wvsum = wvsum
 
+    def on_job_detach(self, job) -> None:
+        # quiescent by contract: just drop the per-task accounting entries
+        for t in job.tasks:
+            self._vruntime.pop(t.tid, None)
+            self._run_started.pop(t.tid, None)
+
     # -- policy ----------------------------------------------------------- #
     def on_ready(self, task: Task) -> None:
         # Sleepers rejoin at max(own vruntime, pool floor): they don't hoard

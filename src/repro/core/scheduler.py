@@ -13,9 +13,20 @@ Invariants (paper §2.3/§4.1, property-tested in tests/test_scheduler_props.py)
   I4. A task that ends its body is parked, not destroyed, when a worker
       cache is attached (§4.3.1) — executor-level behaviour.
 
+  I5. Two-level lease rule (arbiter.py): no job is *granted* a slot beyond
+      its current lease while a sibling policy group has ready tasks and
+      spare lease (work-conserving borrowing otherwise).
+
 The scheduler is executor-agnostic: the discrete-event engine (events.py)
 and the real-thread runtime (threads.py) both drive it through the same
 six entry points: ``submit / block / unblock / yield_ / finish / tick``.
+
+Two-level architecture: the scheduler owns slots, scheduling points and
+invariants; *which job* gets a freed slot and *which task* of that job runs
+is delegated to a job-level ``SlotArbiter`` routing to per-job intra-job
+policies (one job can run SCHED_COOP while a co-located job runs
+SCHED_FAIR). With a single policy group the arbiter is a transparent
+pass-through to the default policy.
 """
 
 from __future__ import annotations
@@ -23,6 +34,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Optional
 
+from repro.core.arbiter import SlotArbiter, SlotLease
 from repro.core.policies.base import Policy, StopReason
 from repro.core.stats import SchedStats, collect
 from repro.core.task import Job, Task, TaskState
@@ -48,7 +60,10 @@ class Scheduler:
     Parameters
     ----------
     topology:  the slot/domain layout.
-    policy:    scheduling policy (SCHED_COOP by default at call sites).
+    policy:    the *default* intra-job policy (SCHED_COOP at most call
+               sites): jobs that never attach with a dedicated policy are
+               multiplexed by this one, exactly as before the two-level
+               split. Per-job policies are added via ``attach_job``.
     clock:     zero-arg callable returning the current time. Virtual in the
                event engine, ``time.monotonic`` in the thread runtime.
     dispatch:  executor callback ``(task, slot_id) -> None`` that actually
@@ -66,6 +81,8 @@ class Scheduler:
         ctx_switch_cost: float = 0.0,
     ):
         self.topology = topology
+        #: the default intra-job policy (kept by name for back-compat; the
+        #: authoritative router is ``self.arbiter``)
         self.policy = policy
         self.clock = clock
         self._dispatch_cb = dispatch
@@ -79,7 +96,9 @@ class Scheduler:
         self._lock = threading.RLock()
         self._ctx_switch_time = 0.0
         self._started_at = self.clock()
-        policy.attach(self)
+        #: job-level slot arbiter: every scheduling point routes through it
+        self.arbiter = SlotArbiter(policy)
+        self.arbiter.attach(self)
 
     # ------------------------------------------------------------------ #
     # job / task registration (nOS-V process registration analogue)
@@ -87,8 +106,31 @@ class Scheduler:
     def register_job(self, job: Job) -> Job:
         with self._lock:
             self.jobs[job.jid] = job
-            self.policy.on_job(job)
+            self.arbiter.on_job(job)
         return job
+
+    def attach_job(self, job: Job, *, policy: Optional[Policy] = None,
+                   share: Optional[float] = None) -> SlotLease:
+        """nosv_attach analogue: register ``job`` with an optional dedicated
+        intra-job policy and an explicit slot share; returns its lease."""
+        with self._lock:
+            lease = self.arbiter.attach_job(job, policy=policy, share=share)
+            self.jobs[job.jid] = job
+            self._fill_idle_slots(self.clock())
+            return lease
+
+    def detach_job(self, job: Job) -> None:
+        """nosv_detach analogue: unregister a quiescent job, freeing its
+        lease for the siblings (raises if it still has READY/RUNNING work).
+        A later submit — or a blocked task waking up — re-registers it."""
+        with self._lock:
+            self.arbiter.detach_job(job)
+            self.jobs.pop(job.jid, None)
+            self._fill_idle_slots(self.clock())
+
+    def policy_of(self, job: Job) -> Policy:
+        """The intra-job policy currently serving ``job``'s tasks."""
+        return self.arbiter.policy_of(job)
 
     # ------------------------------------------------------------------ #
     # the six scheduling entry points
@@ -173,10 +215,13 @@ class Scheduler:
             return self._fill(slot, now)
 
     def preempt(self, task: Task) -> Optional[Task]:
-        """Involuntary preemption — only preemptive baseline policies."""
+        """Involuntary preemption — only preemptive intra-job policies (I2
+        is per job now: a SCHED_COOP job is never preempted even while a
+        co-located SCHED_FAIR job is)."""
         with self._lock:
-            if not self.policy.preemptive:
-                raise SchedulerError(f"{self.policy.name} must not preempt (I2)")
+            pol = self.arbiter.policy_of(task.job)
+            if not pol.preemptive:
+                raise SchedulerError(f"{pol.name} must not preempt (I2)")
             slot, now = self._stop_running(task, StopReason.PREEMPT)
             task.stats.preemptions += 1
             self._make_ready(task, now)
@@ -184,12 +229,14 @@ class Scheduler:
 
     def tick(self, slot_id: int) -> bool:
         """Periodic tick (preemptive policies): should the slot's task be
-        preempted now? The *executor* then calls ``preempt``."""
+        preempted now? The *executor* then calls ``preempt``. Routed to the
+        running task's own policy; the arbiter also turns this into the
+        lease-revocation scheduling point for over-lease preemptive jobs."""
         with self._lock:
             st = self._slots[slot_id]
-            if st.running is None or not self.policy.preemptive:
+            if st.running is None:
                 return False
-            return self.policy.should_preempt(st.running, slot_id, self.clock())
+            return self.arbiter.should_preempt(st.running, slot_id, self.clock())
 
     # ------------------------------------------------------------------ #
     # internals
@@ -197,7 +244,7 @@ class Scheduler:
     def _make_ready(self, task: Task, now: float) -> None:
         task.state = TaskState.READY
         task._ready_at = now  # type: ignore[attr-defined]
-        self.policy.on_ready(task)
+        self.arbiter.on_ready(task)
 
     def _stop_running(self, task: Task, reason: StopReason) -> tuple[int, float]:
         if task.state is not TaskState.RUNNING or task.slot is None:
@@ -210,7 +257,7 @@ class Scheduler:
         elapsed = now - st.run_started
         task.stats.run_time += elapsed
         task.job.service_time += elapsed
-        self.policy.on_stop(task, slot, now, elapsed, reason)
+        self.arbiter.on_stop(task, slot, now, elapsed, reason)
         st.running = None
         st.idle_since = now
         self._idle.add(slot)
@@ -223,18 +270,19 @@ class Scheduler:
         st = self._slots[slot_id]
         if st.running is not None:
             return None
-        task = self.policy.pick(slot_id)
+        task = self.arbiter.pick(slot_id)
         if task is None:
             return None
         return self._run_on(task, slot_id, now)
 
     def _fill_idle_slots(self, now: float) -> None:
         idle = self._idle
-        if not idle or not self.policy.has_ready():
+        arbiter = self.arbiter
+        if not idle or not arbiter.has_ready():
             return
         for sid in sorted(idle):
             if self._slots[sid].running is None:
-                if self._fill(sid, now) is None and not self.policy.has_ready():
+                if self._fill(sid, now) is None and not arbiter.has_ready():
                     break  # nothing ready for anyone
 
     def _run_on(self, task: Task, slot_id: int, now: float) -> Task:
@@ -254,18 +302,25 @@ class Scheduler:
         st.run_started = now
         self._idle.discard(slot_id)
         self._ctx_switch_time += self.ctx_switch_cost
-        self.policy.on_run(task, slot_id, now)
+        self.arbiter.on_run(task, slot_id, now)
         self._dispatch_cb(task, slot_id)
         return task
 
     # ------------------------------------------------------------------ #
     # introspection / diagnostics
     # ------------------------------------------------------------------ #
+    def running_on(self, slot_id: int) -> Optional[Task]:
+        """Lock-free peek at one slot (single-threaded executors only —
+        the sim engine's tick path; racy under the real-thread runtime)."""
+        return self._slots[slot_id].running
+
     def running_tasks(self) -> list[Optional[Task]]:
-        return [s.running for s in self._slots]
+        with self._lock:
+            return [s.running for s in self._slots]
 
     def idle_slot_ids(self) -> list[int]:
-        return sorted(self._idle)
+        with self._lock:
+            return sorted(self._idle)
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -274,18 +329,20 @@ class Scheduler:
                 states[t.state.value] = states.get(t.state.value, 0) + 1
             return {
                 "now": self.clock(),
-                "policy": self.policy.name,
-                "slots_busy": self.topology.n_slots - len(self.idle_slot_ids()),
+                "policy": self.arbiter.describe(),
+                "slots_busy": self.topology.n_slots - len(self._idle),
                 "slots": self.topology.n_slots,
                 "task_states": states,
-                "ready": self.policy.ready_count(),
+                "ready": self.arbiter.ready_count(),
+                "leases": self.arbiter.lease_snapshot(),
             }
 
     def stats(self) -> SchedStats:
-        s = collect(
-            self.all_tasks,
-            makespan=self.clock() - self._started_at,
-            n_slots=self.topology.n_slots,
-        )
-        s.context_switch_time = self._ctx_switch_time
+        with self._lock:  # all_tasks/slot accounting mutate under _lock
+            s = collect(
+                self.all_tasks,
+                makespan=self.clock() - self._started_at,
+                n_slots=self.topology.n_slots,
+            )
+            s.context_switch_time = self._ctx_switch_time
         return s

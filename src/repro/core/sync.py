@@ -206,13 +206,49 @@ class CoopEvent:
     def is_set(self) -> bool:
         return self._set
 
-    def wait(self) -> None:
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Wait for the event; returns False on timeout (True otherwise).
+
+        Works for both waiter kinds: plain threads time out on the embedded
+        Event; gated tasks arm a timer that withdraws the waiter from the
+        queue and resubmits the task (a timed nosv_pause). A timer firing
+        concurrently with ``set()`` is benign: whichever side dequeues the
+        waiter first wakes it, the other finds it gone."""
         with self._spin:
             if self._set:
-                return
-            w = _Waiter(_gated_task(self._rt))
+                return True
+            task = _gated_task(self._rt)
+            w = _Waiter(task)
             self._waiting.append(w)
-        w.wait(self._rt)
+        if task is None:
+            if w.event.wait(timeout):
+                return True
+            with self._spin:  # withdraw so a later set() skips us
+                try:
+                    self._waiting.remove(w)
+                except ValueError:
+                    pass
+            return self._set
+        if timeout is None:
+            w.wait(self._rt)
+            return True
+        timed_out = [False]
+
+        def expire() -> None:
+            with self._spin:
+                try:
+                    self._waiting.remove(w)
+                except ValueError:
+                    return  # set() already claimed this waiter
+                timed_out[0] = True
+            self._rt.ready(task)
+
+        timer = threading.Timer(timeout, expire)
+        timer.daemon = True
+        timer.start()
+        self._rt.pause()
+        timer.cancel()
+        return self._set or not timed_out[0]
 
     def set(self) -> None:
         with self._spin:

@@ -51,16 +51,27 @@ class Job:
 
     ``nice`` mirrors the paper's microservices setup (gateway nice 0 vs
     server nice 20); SCHED_COOP itself does not need it, but preemptive
-    baselines weight quanta by it.
+    baselines weight quanta by it, and the job-level ``SlotArbiter``
+    derives the default lease ``share`` from it.
+
+    ``share``/``lease`` are the two-level scheduling fields: ``share`` is
+    an optional explicit slot-share weight (``None`` -> derived from
+    ``nice``); ``lease`` is set by the arbiter while the job is attached
+    (``repro.core.arbiter.SlotLease``) and ``None`` otherwise.
     """
 
-    __slots__ = ("jid", "name", "nice", "quantum", "tasks", "service_time")
+    __slots__ = ("jid", "name", "nice", "quantum", "tasks", "service_time",
+                 "share", "lease")
 
-    def __init__(self, name: str, *, nice: int = 0, quantum: Optional[float] = None):
+    def __init__(self, name: str, *, nice: int = 0,
+                 quantum: Optional[float] = None,
+                 share: Optional[float] = None):
         self.jid: int = next(_JID)
         self.name = name
         self.nice = nice
         self.quantum = quantum  # None -> policy default (paper: 20 ms)
+        self.share = share      # None -> nice-derived weight (arbiter)
+        self.lease: Optional[Any] = None  # SlotLease while attached
         self.tasks: list["Task"] = []
         self.service_time: float = 0.0  # total slot time consumed
 

@@ -40,6 +40,16 @@ class UsfError(RuntimeError):
     pass
 
 
+class UsfTaskError(UsfError):
+    """A task body raised: re-surfaced at join (the worker itself parks
+    back in the cache — §4.3.1 — so the failure must travel via the task)."""
+
+    def __init__(self, task: Task, tb: str):
+        super().__init__(f"task {task.name!r} of {task.job.name!r} raised:\n{tb}")
+        self.task = task
+        self.traceback = tb
+
+
 class _Worker:
     """A cached OS thread that serves one task at a time."""
 
@@ -120,20 +130,69 @@ class UsfRuntime:
     def join(self, task: Task, timeout: Optional[float] = None) -> bool:
         """pthread_join, masked (§4.3.1): the worker is already parked in the
         cache; we only wait for task completion. A gated caller blocks
-        cooperatively (releases its slot); an external thread just waits."""
+        cooperatively (releases its slot); an external thread just waits.
+
+        Returns False on timeout. If the task body raised, the exception is
+        re-surfaced here as ``UsfTaskError`` instead of silently reporting
+        completion."""
         cur = self.current_task()
         ev: threading.Event = task._done_event  # type: ignore[attr-defined]
         if cur is None or not self.gating:
-            return ev.wait(timeout)
+            if not ev.wait(timeout):
+                return False
+            self._check_task_exc(task)
+            return True
         # registration must be atomic wrt finish() (which runs on_done under
-        # the scheduler lock), or the wakeup could be lost
+        # the scheduler lock), or the wakeup could be lost. The wake fires
+        # at most once, from either completion or the timeout timer.
+        woken = [False]
+
+        def wake_once(_t=None) -> None:
+            with self.sched._lock:
+                if woken[0]:
+                    return
+                woken[0] = True
+                self.sched.unblock(cur)
+
         with self.sched._lock:
             if task.done:
+                self._check_task_exc(task)
                 return True
-            task.on_done.append(lambda _t: self.sched.unblock(cur))
+            task.on_done.append(wake_once)
+        timer: Optional[threading.Timer] = None
+        if timeout is not None:
+            timer = threading.Timer(timeout, wake_once)
+            timer.daemon = True
+            timer.start()
         self.sched.block(cur)
         self._park(cur)
-        return task.done
+        if timer is not None:
+            timer.cancel()
+        if task.done:
+            self._check_task_exc(task)
+            return True
+        return False
+
+    def _check_task_exc(self, task: Task) -> None:
+        exc = getattr(task, "_exc", None)
+        if exc is not None:
+            raise UsfTaskError(task, exc)
+
+    # ------------------------------------------------------------------ #
+    # job-level attach/detach (nosv_attach analogue, two-level scheduling)
+    # ------------------------------------------------------------------ #
+    def attach(self, job: Job, *, policy: Optional[Policy] = None,
+               share: Optional[float] = None):
+        """Register ``job`` with an optional dedicated intra-job policy and
+        slot share; returns its ``SlotLease``. In the real-thread runtime,
+        lease reclaim is honoured at scheduling points (block/yield/finish):
+        there is no tick driver here, so shrunk leases of busy cooperative
+        jobs take effect at the job's next blocking point."""
+        return self.sched.attach_job(job, policy=policy, share=share)
+
+    def detach(self, job: Job) -> None:
+        """Unregister a quiescent job, releasing its lease to the siblings."""
+        self.sched.detach_job(job)
 
     # ------------------------------------------------------------------ #
     # nOS-V-like blocking API (used by repro.core.sync)
@@ -238,6 +297,12 @@ class UsfRuntime:
                     self._park(task)
                     try:
                         fn(*args, **kwargs)
+                    except BaseException:
+                        import traceback
+
+                        # record BEFORE finish(): join waiters wake inside
+                        # finish() and must observe the failure (no race)
+                        task._exc = traceback.format_exc()  # type: ignore[attr-defined]
                     finally:
                         self.sched.finish(task)
                 else:
@@ -249,12 +314,16 @@ class UsfRuntime:
                     task.stats.first_run_at = now
                     try:
                         fn(*args, **kwargs)
+                    except BaseException:
+                        import traceback
+
+                        task._exc = traceback.format_exc()  # type: ignore[attr-defined]
                     finally:
                         task.state = TaskState.DONE
                         task.stats.done_at = time.monotonic()
                         for cb in task.on_done:
                             cb(task)
-            except Exception:  # pragma: no cover - surfaced via task.exc
+            except Exception:  # pragma: no cover - runtime-internal failure
                 import traceback
 
                 task._exc = traceback.format_exc()  # type: ignore[attr-defined]

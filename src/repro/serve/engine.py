@@ -9,6 +9,12 @@ a decode burst mid-flight (the HBM-residency analogue of cache affinity).
 
 The gateway fans a request to several model servers and joins the
 responses (the paper's agentic benchmark: LLaMA + GPT-2 + RoBERTa).
+
+Two-level scheduling: the gateway and every server attach as their own
+arbiter group (a dedicated SCHED_COOP instance each) with a slot ``share``
+derived from ``nice`` unless given explicitly — the paper's
+gateway-nice-0 / servers-nice-20 priority story expressed as slot leases,
+with work-conserving borrowing when the gateway is idle.
 """
 
 from __future__ import annotations
@@ -22,9 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policies import Policy, SchedCoop
 from repro.core.sync import CoopChannel, CoopEvent
 from repro.core.task import Job
-from repro.core.threads import UsfRuntime
+from repro.core.threads import UsfRuntime, UsfTaskError
 from repro.launch.inputs import make_decode_inputs
 from repro.models.base import init_tree
 from repro.models.registry import build_model
@@ -57,11 +64,14 @@ class InferenceServer:
 
     def __init__(self, name: str, cfg, usf: UsfRuntime, *,
                  max_batch: int = 2, max_len: int = 64, seed: int = 0,
-                 nice: int = 0):
+                 nice: int = 0, share: Optional[float] = None,
+                 policy: Optional[Policy] = None):
         self.name = name
         self.cfg = cfg
         self.usf = usf
-        self.job = Job(name, nice=nice)
+        self.job = Job(name, nice=nice, share=share)
+        self._policy = policy
+        self.lease = None  # set on start()
         self.max_batch = max_batch
         self.max_len = max_len
         self.queue = CoopChannel(usf)
@@ -83,6 +93,13 @@ class InferenceServer:
         return req
 
     def start(self) -> None:
+        # each server is its own arbiter group: a dedicated intra-job policy
+        # under a nice-weighted (or explicit) slot lease
+        if self.job.lease is None:
+            self.lease = self.usf.attach(
+                self.job, policy=self._policy or SchedCoop(),
+                share=self.job.share,
+            )
         self._task = self.usf.create(self._serve_loop, job=self.job,
                                      name=f"{self.name}-worker")
 
@@ -153,22 +170,52 @@ class Gateway:
     """Fans each request out to all servers; joins all responses (§5.5)."""
 
     def __init__(self, usf: UsfRuntime, servers: list[InferenceServer],
-                 *, nice: int = 0):
+                 *, nice: int = 0, share: Optional[float] = None,
+                 policy: Optional[Policy] = None):
         self.usf = usf
         self.servers = servers
-        self.job = Job("gateway", nice=nice)
+        self.job = Job("gateway", nice=nice, share=share)
+        # the gateway gets its own lease too (nice 0 -> heaviest share by
+        # default, mirroring the paper's microservices priority setup)
+        self.lease = usf.attach(self.job, policy=policy or SchedCoop(),
+                                share=share)
         self.responses: list[dict] = []
 
-    def handle(self, tokens: list[int], max_new: int = 4) -> dict:
-        """Runs on the caller's USF task: submit to every server, wait all."""
+    def _check_servers(self) -> None:
+        """A dead server worker would leave fanned-out requests pending
+        forever: surface its task exception to the caller instead."""
+        for s in self.servers:
+            t = s._task
+            if t is not None and getattr(t, "_exc", None) is not None:
+                raise UsfTaskError(t, t._exc)
+
+    def handle(self, tokens: list[int], max_new: int = 4,
+               timeout: Optional[float] = None) -> dict:
+        """Runs on the caller's USF task: submit to every server, wait all.
+
+        Polls the response events so a crashed server worker raises
+        ``UsfTaskError`` here rather than hanging the request; ``timeout``
+        (wall seconds, whole fan-out) raises ``TimeoutError``."""
         t0 = time.monotonic()
+        deadline = None if timeout is None else t0 + timeout
         reqs = []
         for s in self.servers:
             r = Request(tokens=list(tokens), max_new=max_new, arrival=t0)
             s.submit(r)
             reqs.append(r)
         for r in reqs:
-            r.done.wait()
+            while True:
+                poll = 0.5
+                if deadline is not None:
+                    poll = min(poll, max(deadline - time.monotonic(), 0.0))
+                if r.done.wait(timeout=poll):
+                    break
+                self._check_servers()
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"gateway fan-out exceeded {timeout}s "
+                        f"(request {r.rid})"
+                    )
         rec = {
             "latency": time.monotonic() - t0,
             "per_server": {s.name: r.latency for s, r in zip(self.servers, reqs)},

@@ -1,0 +1,418 @@
+"""Two-level scheduler tests: SlotArbiter leases, attach/detach, I5.
+
+Invariant I5 (grant rule): no job is granted a slot beyond its current
+lease while a sibling policy group has ready tasks and spare lease. The
+lockstep harness wraps ``arbiter.pick`` and checks the rule at every
+grant across seeded-random mixed-policy workloads (the hypothesis-free
+property-test pattern of tests/test_sched_fastpath.py).
+
+Also covered: per-job policy mixing end-to-end (SCHED_COOP co-located
+with SCHED_FAIR: I2 per job, share enforcement, determinism), elastic
+lease resize, dynamic re-registration, and the satellite fixes (locked
+stats, task-exception surfacing in join, CoopEvent timed wait).
+"""
+
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import simtask as st
+from repro.core.arbiter import ArbiterError, SlotArbiter
+from repro.core.events import SimExecutor
+from repro.core.policies import SchedCoop, SchedFair, SchedRR
+from repro.core.task import Job, TaskState
+from repro.core.topology import Topology
+
+
+def make_sim(n_slots=8, domains=2, **kw):
+    return SimExecutor(Topology(n_slots, domains), SchedCoop(quantum=0.02),
+                       max_time=kw.pop("max_time", 1e9), **kw)
+
+
+def churn(compute=0.002, pause=0.0005, iters=None):
+    def gen():
+        i = 0
+        while iters is None or i < iters:
+            yield st.compute(compute)
+            yield st.sleep(pause)
+            i += 1
+
+    return gen
+
+
+def install_i5_checker(sim):
+    """Wrap arbiter.pick: every borrowing grant (a group at/over quota)
+    must find no sibling group with both ready work and spare lease.
+    Install AFTER all attach()/detach() calls: a group change rebinds the
+    arbiter's pick entry point, which would clobber the wrapper."""
+    arb = sim.sched.arbiter
+    violations = []
+    orig_pick = arb.pick
+
+    def checked_pick(slot_id):
+        task = orig_pick(slot_id)
+        if task is not None and arb.multi:
+            lease = task.job.lease
+            g = lease.group
+            if g.in_use >= g.quota:  # borrowing grant (in_use not yet bumped)
+                for h in arb.groups():
+                    if h is g:
+                        continue
+                    if h.in_use < h.quota and h.policy.has_ready():
+                        violations.append(
+                            f"I5: {g!r} granted slot {slot_id} while "
+                            f"{h!r} had ready work and spare lease"
+                        )
+        return task
+
+    arb.pick = checked_pick
+    return violations
+
+
+# --------------------------------------------------------------------- #
+# lease apportionment & lifecycle
+# --------------------------------------------------------------------- #
+def test_quota_apportionment_sums_to_slots():
+    sim = make_sim(n_slots=8)
+    leases = [
+        sim.attach(Job(f"j{i}"), policy=SchedCoop(), share=s)
+        for i, s in enumerate((5.0, 2.0, 1.0))
+    ]
+    assert sum(l.quota for l in leases) == 8
+    assert [l.quota for l in leases] == [5, 2, 1]
+    # re-apportioned when a job leaves
+    sim.detach(leases[1].job)
+    assert leases[0].quota + leases[2].quota == 8
+    assert leases[0].quota > leases[2].quota
+
+
+def test_attach_detach_lifecycle_and_reregistration():
+    sim = make_sim(n_slots=4)
+    job = Job("burst")
+    lease = sim.attach(job, policy=SchedFair(slice_s=0.002), share=1.0)
+    assert job.lease is lease and sim.sched.arbiter.multi
+    tasks = [sim.spawn(job, churn(iters=5)) for _ in range(6)]
+
+    # detach while work is in flight must be refused
+    with pytest.raises(ArbiterError):
+        sim.detach(job)
+    sim.run()
+    assert all(t.done for t in tasks)
+
+    sim.detach(job)
+    assert job.lease is None and not sim.sched.arbiter.multi
+    with pytest.raises(ArbiterError):
+        sim.detach(job)  # double detach
+
+    # dynamic re-registration: a fresh submit transparently re-registers
+    # the detached job through the default group
+    t = sim.spawn(job, churn(iters=3))
+    sim.run()
+    assert t.done
+    assert sim.sched.arbiter.policy_of(job) is sim.sched.policy
+
+
+def test_detached_jobs_blocked_task_reregisters_across_mode_switch():
+    """Regression: a detached job's BLOCKED task waking up while the
+    arbiter is in single-group mode must re-register (get a lease), or a
+    later switch to multi-group mode crashes on the leaseless task."""
+    sim = make_sim(n_slots=1, domains=1)
+    job_a, job_f = Job("sleeper"), Job("filler")
+
+    def sleeper():
+        yield st.sleep(0.01)
+        yield st.compute(0.005)
+
+    t_a = sim.spawn(job_a, sleeper)
+    sim.spawn(job_f, churn(compute=0.001, pause=0.0001, iters=100))
+    sim.run(until=0.005)
+    assert t_a.state is TaskState.BLOCKED
+    sim.detach(job_a)  # allowed: only BLOCKED work left
+    assert job_a.lease is None
+    sim.run(until=0.012)  # the sleep expires in single-group mode
+    assert job_a.lease is not None  # dynamically re-registered
+    job_b = Job("late")
+    sim.attach(job_b, policy=SchedFair(slice_s=0.002), share=1.0)
+    sim.spawn(job_b, churn(iters=5))
+    sim.run()  # must not crash in the multi-group accounting
+    assert t_a.done
+
+
+def test_attach_rejects_duplicate_and_shared_policy_instance():
+    sim = make_sim()
+    job_a, job_b = Job("a"), Job("b")
+    pol = SchedCoop()
+    sim.attach(job_a, policy=pol)
+    with pytest.raises(ArbiterError):
+        sim.attach(job_a, policy=SchedCoop())  # already attached
+    with pytest.raises(ArbiterError):
+        sim.attach(job_b, policy=pol)  # policy instance reuse
+
+
+def test_attach_with_dedicated_policy_requires_quiescence():
+    sim = make_sim(n_slots=1, domains=1)
+    job = Job("busy")
+    sim.spawn(job, churn(iters=50))  # submits immediately -> READY/RUNNING
+    with pytest.raises(ArbiterError):
+        sim.attach(job, policy=SchedFair())
+
+
+# --------------------------------------------------------------------- #
+# I5 lockstep + seeded property sweep
+# --------------------------------------------------------------------- #
+def _random_mixed_run(seed: int) -> None:
+    rng = random.Random(seed)
+    n_slots = rng.choice((2, 4, 8))
+    sim = SimExecutor(Topology(n_slots, 1), SchedCoop(quantum=0.01),
+                      max_time=600.0)
+
+    jobs = []
+    for i in range(rng.randint(2, 3)):
+        job = Job(f"p{seed}-{i}")
+        pol = rng.choice((
+            lambda: SchedCoop(quantum=0.01),
+            lambda: SchedFair(slice_s=0.002),
+            lambda: SchedRR(quantum=0.002),
+        ))()
+        sim.attach(job, policy=pol, share=rng.choice((1.0, 2.0, 5.0)))
+        jobs.append(job)
+    violations = install_i5_checker(sim)
+
+    def body(prog):
+        def gen():
+            for kind, v in prog:
+                if kind == "compute":
+                    yield st.compute(v)
+                elif kind == "sleep":
+                    yield st.sleep(v)
+                else:
+                    yield st.yield_()
+
+        return gen
+
+    tasks = []
+    for _ in range(rng.randint(4, 4 * n_slots)):
+        prog = [
+            (rng.choice(("compute", "sleep", "yield")), rng.uniform(5e-4, 8e-3))
+            for _ in range(rng.randint(1, 6))
+        ]
+        tasks.append(sim.spawn(rng.choice(jobs), body(prog)))
+
+    sim.run()
+    assert all(t.done for t in tasks), f"seed {seed}: unfinished tasks"
+    assert not violations, f"seed {seed}: {violations[:3]}"
+    # I2 held per job: cooperative jobs saw zero preemptions
+    for job in jobs:
+        if not sim.sched.policy_of(job).preemptive:
+            assert sum(t.stats.preemptions for t in job.tasks) == 0
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_i5_lockstep_random_mixed_workloads(seed):
+    _random_mixed_run(seed)
+
+
+def test_i5_holds_under_elastic_resize():
+    sim = make_sim(n_slots=8, domains=1)
+    job_a, job_b = Job("a"), Job("b")
+    lease_a = sim.attach(job_a, policy=SchedCoop(quantum=0.01), share=1.0)
+    sim.attach(job_b, policy=SchedFair(slice_s=0.002), share=1.0)
+    violations = install_i5_checker(sim)
+    for _ in range(12):
+        sim.spawn(job_a, churn())
+        sim.spawn(job_b, churn())
+    sim.run(until=0.2)
+    for share in (6.0, 0.5, 3.0):
+        lease_a.resize(share)
+        sim.run(until=sim.now() + 0.2)
+    assert not violations, violations[:3]
+
+
+# --------------------------------------------------------------------- #
+# policy mixing end-to-end
+# --------------------------------------------------------------------- #
+def test_policy_mixing_share_enforcement_and_i2():
+    """Saturated SCHED_COOP + SCHED_FAIR co-location at a 3:1 share split:
+    realized service tracks the lease, coop never preempted, fair is."""
+    sim = make_sim(n_slots=8, domains=2)
+    job_a, job_b = Job("coop", share=3.0), Job("fair", share=1.0)
+    lease_a = sim.attach(job_a, policy=SchedCoop(quantum=0.02))
+    lease_b = sim.attach(job_b, policy=SchedFair(slice_s=0.003))
+    assert (lease_a.quota, lease_b.quota) == (6, 2)
+    for _ in range(16):
+        sim.spawn(job_a, churn())
+        sim.spawn(job_b, churn())
+    sim.run(until=1.0)
+
+    total = job_a.service_time + job_b.service_time
+    frac_a = job_a.service_time / total
+    assert 0.70 <= frac_a <= 0.80, f"share not enforced: frac_a={frac_a:.3f}"
+    assert sum(t.stats.preemptions for t in job_a.tasks) == 0  # I2 per job
+    assert sum(t.stats.preemptions for t in job_b.tasks) > 0
+    snap = sim.sched.snapshot()
+    assert snap["policy"] == "arbiter[SCHED_COOP+SCHED_FAIR]"
+    assert snap["leases"]["coop"]["quota"] == 6
+
+
+def test_work_conserving_borrowing_when_sibling_idle():
+    """A job with a tiny lease expands to the whole node while the sibling
+    has nothing ready (no static-partition waste)."""
+    sim = make_sim(n_slots=8, domains=1)
+    job_a, job_b = Job("small"), Job("idle")
+    lease_a = sim.attach(job_a, policy=SchedCoop(quantum=0.02), share=1.0)
+    sim.attach(job_b, policy=SchedFair(slice_s=0.003), share=7.0)
+    assert lease_a.quota == 1
+    for _ in range(16):
+        sim.spawn(job_a, churn())
+    sim.run(until=0.5)
+    # ~all of the node's 0.5s * 8 slots went to the small-lease job
+    assert job_a.service_time > 0.9 * 0.5 * 8
+
+
+def test_mixed_workload_deterministic():
+    def run_once():
+        sim = make_sim(n_slots=4, domains=1)
+        job_a, job_b = Job("a"), Job("b")
+        sim.attach(job_a, policy=SchedCoop(quantum=0.01), share=2.0)
+        sim.attach(job_b, policy=SchedFair(slice_s=0.002), share=1.0)
+        tasks = [sim.spawn(job_a, churn(iters=20)) for _ in range(6)]
+        tasks += [sim.spawn(job_b, churn(iters=20)) for _ in range(6)]
+        s = sim.run()
+        return (s.makespan, s.dispatches, s.preemptions,
+                round(job_a.service_time, 9), round(job_b.service_time, 9))
+
+    assert run_once() == run_once()
+
+
+def test_lease_revocation_tick_reclaims_borrowed_slots():
+    """A preemptive job borrowing beyond its lease is preempted at the next
+    tick once the under-lease sibling has ready work again."""
+    sim = make_sim(n_slots=4, domains=1)
+    job_a, job_b = Job("coop"), Job("fair")
+    sim.attach(job_a, policy=SchedCoop(quantum=0.01), share=2.0)
+    sim.attach(job_b, policy=SchedFair(slice_s=0.002), share=2.0)
+    # B starts alone and borrows the whole node with long computes
+    for _ in range(8):
+        sim.spawn(job_b, churn(compute=0.05, pause=0.0001))
+    # A arrives later: its lease must be honoured without waiting for B's
+    # 50ms computes to end voluntarily (the revocation scheduling point)
+    for _ in range(8):
+        sim.spawn(job_a, churn(compute=0.002, pause=0.0001), at=0.01)
+    sim.run(until=0.5)
+    assert job_a.service_time > 0.15  # got its half in reasonable time
+    assert sum(t.stats.preemptions for t in job_b.tasks) > 0
+
+
+# --------------------------------------------------------------------- #
+# satellites: locked introspection, exception surfacing, timed waits
+# --------------------------------------------------------------------- #
+def test_stats_and_running_tasks_locked_under_thread_executor():
+    """Concurrent stats()/running_tasks()/snapshot() while real threads
+    churn through the scheduler must not race (satellite: they now take
+    the scheduler lock like snapshot always did)."""
+    from repro.core.threads import UsfRuntime
+
+    rt = UsfRuntime(Topology(2, 1), SchedCoop())
+    try:
+        job = Job("j")
+        stop = threading.Event()
+        errors = []
+
+        def reader():
+            while not stop.is_set():
+                try:
+                    rt.sched.stats()
+                    rt.sched.running_tasks()
+                    rt.sched.snapshot()
+                except Exception as e:  # pragma: no cover - the regression
+                    errors.append(e)
+                    return
+
+        readers = [threading.Thread(target=reader) for _ in range(2)]
+        for r in readers:
+            r.start()
+        tasks = [rt.create(lambda: time.sleep(0.002), job=job)
+                 for _ in range(24)]
+        for t in tasks:
+            assert rt.join(t, timeout=10.0)
+        stop.set()
+        for r in readers:
+            r.join(5.0)
+        assert not errors
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_join_reraises_task_exception():
+    from repro.core.threads import UsfRuntime, UsfTaskError
+
+    rt = UsfRuntime(Topology(2, 1), SchedCoop())
+    try:
+        job = Job("j")
+
+        def boom():
+            raise ValueError("worker died")
+
+        t = rt.create(boom, job=job)
+        with pytest.raises(UsfTaskError, match="worker died"):
+            rt.join(t, timeout=10.0)
+        # joining again keeps raising (no silent success on retry)
+        with pytest.raises(UsfTaskError):
+            rt.join(t, timeout=10.0)
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_join_timeout_from_gated_task():
+    from repro.core.sync import CoopEvent
+    from repro.core.threads import UsfRuntime
+
+    rt = UsfRuntime(Topology(2, 1), SchedCoop())
+    try:
+        job = Job("j")
+        gate = CoopEvent(rt)
+        hung = rt.create(gate.wait, job=job)
+        results = {}
+
+        def joiner():
+            results["timed_out"] = rt.join(hung, timeout=0.1)
+
+        j = rt.create(joiner, job=job)
+        assert rt.join(j, timeout=10.0)
+        assert results["timed_out"] is False
+        gate.set()
+        assert rt.join(hung, timeout=10.0)
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_coop_event_wait_timeout_both_waiter_kinds():
+    from repro.core.sync import CoopEvent
+    from repro.core.threads import UsfRuntime
+
+    rt = UsfRuntime(Topology(2, 1), SchedCoop())
+    try:
+        ev = CoopEvent(rt)
+        # plain-thread waiter
+        t0 = time.monotonic()
+        assert ev.wait(timeout=0.05) is False
+        assert time.monotonic() - t0 < 5.0
+        # gated-task waiter
+        job = Job("j")
+        results = {}
+
+        def waiter():
+            results["first"] = ev.wait(timeout=0.05)
+            results["second"] = ev.wait(timeout=30.0)
+
+        t = rt.create(waiter, job=job)
+        time.sleep(0.3)  # let the timed wait expire
+        ev.set()
+        assert rt.join(t, timeout=10.0)
+        assert results["first"] is False
+        assert results["second"] is True
+        assert ev.wait(timeout=0.0) is True  # already set: immediate
+    finally:
+        rt.shutdown(timeout=5.0)
