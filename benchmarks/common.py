@@ -62,12 +62,19 @@ STACKS = {
 }
 
 
+def stack_policy(stack: StackConfig):
+    """A fresh intra-job policy instance matching the stack's flavour (one
+    mapping for the node executor AND per-job lease groups, so leased
+    scenarios stay comparable to their flat twins)."""
+    if stack.policy == "coop":
+        return SchedCoop(quantum=stack.quantum)
+    return SchedFair(slice_s=0.003)
+
+
 def make_executor(stack: StackConfig, *, cores: int = CORES,
                   max_time: float = 3600.0) -> SimExecutor:
-    policy = (SchedCoop(quantum=stack.quantum) if stack.policy == "coop"
-              else SchedFair(slice_s=0.003))
     domains = 2 if cores % 2 == 0 else 1
-    return SimExecutor(node_topology(cores, domains), policy,
+    return SimExecutor(node_topology(cores, domains), stack_policy(stack),
                        costs=SimCosts(), max_time=max_time)
 
 

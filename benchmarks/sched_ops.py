@@ -166,6 +166,75 @@ def bench_arbiter_cycle(*, n_ready: int, n_slots: int,
 
 
 # --------------------------------------------------------------------------- #
+# real-thread tick driver (watchdog)
+# --------------------------------------------------------------------------- #
+def bench_tick_driver(*, n_timers: int, repeat: int = 1) -> dict:
+    """Watchdog timer-heap throughput: one op = an armed timed wakeup
+    fired through the single tick-driver thread (the ``threading.Timer``
+    replacement behind ``sleep()``/timeouts/preemption ticks)."""
+    import threading
+    import time as _time
+    from types import SimpleNamespace
+
+    from repro.core.threads import _Watchdog
+
+    best = 0.0
+    total = 0
+    for _ in range(max(1, repeat)):
+        wd = _Watchdog(SimpleNamespace(sched=None))
+        done = threading.Event()
+        count = [0]
+
+        def cb():
+            count[0] += 1
+            if count[0] == n_timers:
+                done.set()
+
+        t0 = time.perf_counter()
+        now = _time.monotonic()  # all due immediately: measures heap+fire
+        for _i in range(n_timers):
+            wd.call_at(now, cb)
+        assert done.wait(60.0), "watchdog never drained the timer heap"
+        dt = time.perf_counter() - t0
+        wd.stop()
+        best = max(best, count[0] / dt)
+        total += count[0]
+    return {"ops_per_sec": best, "iterations": total, "n_timers": n_timers}
+
+
+def bench_preempt_cycle(*, duration: float = 1.0) -> dict:
+    """End-to-end real-thread preemption rate: two CPU-bound SCHED_FAIR
+    tasks share ONE slot under a fast tick; one op = a delivered
+    preemption (watchdog tick -> request_preempt -> checkpoint yield ->
+    redispatch of the sibling)."""
+    import threading
+
+    from repro.core.threads import UsfRuntime
+
+    rt = UsfRuntime(Topology(1, 1), SchedFair(slice_s=0.002))
+    stop = threading.Event()
+
+    def spin():
+        n = 0
+        while not stop.is_set():
+            n += 1
+            if n % 200 == 0:
+                rt.checkpoint()
+
+    job = Job("bench-preempt")
+    tasks = [rt.create(spin, job=job) for _ in range(2)]
+    time.sleep(duration)
+    stop.set()
+    for t in tasks:
+        assert rt.join(t, timeout=10.0)
+    preempts = sum(t.stats.preemptions for t in tasks)
+    ticks = rt.watchdog.ticks_fired
+    rt.shutdown(timeout=5.0)
+    return {"ops_per_sec": preempts / duration, "iterations": preempts,
+            "ticks_fired": ticks, "duration_s": duration}
+
+
+# --------------------------------------------------------------------------- #
 # sim-event engine throughput
 # --------------------------------------------------------------------------- #
 def _count_events(sim) -> SimpleNamespace:
@@ -308,6 +377,15 @@ def main(argv=None) -> int:
     results["policy.arbiter2.pick_cycle"] = r
     print(f"policy.arbiter2.pick_cycle: {r['ops_per_sec']:,.0f} ops/s "
           f"(ready={r['n_ready']}, coop+fair two-level)")
+    r = bench_tick_driver(n_timers=500 if args.smoke else 5000,
+                          repeat=1 if args.smoke else 3)
+    results["sched.tick_driver"] = r
+    print(f"sched.tick_driver: {r['ops_per_sec']:,.0f} timer-fires/s "
+          f"({r['n_timers']} timers, one watchdog thread)")
+    r = bench_preempt_cycle(duration=0.3 if args.smoke else 1.0)
+    results["sched.preempt_cycle"] = r
+    print(f"sched.preempt_cycle: {r['ops_per_sec']:,.0f} preemptions/s "
+          f"(real threads, 1 slot, tick {0.002}s)")
     for kind in ("yield_churn", "fair_ticks"):
         r = bench_sim_events(kind, scale=scale,
                              repeat=1 if args.smoke else 2)

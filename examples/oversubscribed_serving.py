@@ -3,18 +3,63 @@
 Three model servers (different smoke-size architectures) + a gateway share
 a 2-slot USF runtime. Clients fan requests through the gateway; every wait
 (request queue, batch formation, device step) is a USF blocking point.
+Servers start through the default group and are re-homed LIVE into their
+own lease groups (no drain).
+
+Phase 2 demos preemptive co-location on real threads: a CPU-bound
+SCHED_FAIR batch job shares the node under its own lease — the watchdog
+tick driver time-slices it at ``usf.checkpoint()`` preemption points and a
+mid-run ``lease.resize()`` reclaims its slots within a tick period, while
+the SCHED_COOP servers take zero preemptions (I2 per job).
 
 Run:  PYTHONPATH=src python examples/oversubscribed_serving.py
 """
 
+import threading
 import time
 
 from repro.configs.base import get_smoke
-from repro.core.policies import SchedCoop
+from repro.core.policies import SchedCoop, SchedFair
 from repro.core.task import Job
 from repro.core.threads import UsfRuntime
 from repro.core.topology import Topology
 from repro.serve.engine import Gateway, InferenceServer
+
+
+def preemptive_colocation_demo(usf, servers, gw):
+    """Phase 2: a preemptive batch job co-located with the live servers."""
+    batch = Job("batch-analytics")
+    lease = usf.attach(batch, policy=SchedFair(slice_s=0.02), share=600.0)
+    stop = threading.Event()
+
+    def crunch():
+        n = 0
+        while not stop.is_set():  # CPU-bound: never blocks voluntarily
+            n += 1
+            if n % 2000 == 0:
+                usf.checkpoint()  # the only preemption points it has
+
+    workers = [usf.create(crunch, job=batch, name=f"batch{i}")
+               for i in range(3)]
+    r1 = gw.handle([5, 6, 7], max_new=2, timeout=300.0)
+    lease.resize(60.0)  # elastic reclaim: hand slots back to the servers
+    r2 = gw.handle([8, 9, 10], max_new=2, timeout=300.0)
+    stop.set()
+    for w in workers:
+        assert usf.join(w, timeout=30.0)
+    batch_preempts = sum(t.stats.preemptions for t in batch.tasks)
+    coop_preempts = sum(
+        sum(t.stats.preemptions for t in s.job.tasks) for s in servers
+    )
+    print(f"phase 2 (preemptive co-location on real threads):")
+    print(f"  fan-out latency with batch job pinned: {r1['latency']*1e3:.0f}ms,"
+          f" after lease.resize reclaim: {r2['latency']*1e3:.0f}ms")
+    print(f"  batch preemptions={batch_preempts} (watchdog-delivered), "
+          f"coop-server preemptions={coop_preempts} (I2: must be 0)")
+    print(f"  watchdog ticks={usf.watchdog.ticks_fired}, "
+          f"preempt requests={usf.watchdog.preempts_requested}")
+    assert coop_preempts == 0
+    usf.detach(batch)
 
 
 def main():
@@ -47,6 +92,9 @@ def main():
           f"{len(servers)} models in {dt:.1f}s on 2 slots")
     print(f"latency p50={lats[len(lats) // 2] * 1e3:.0f}ms "
           f"max={lats[-1] * 1e3:.0f}ms")
+
+    preemptive_colocation_demo(usf, servers, gw)
+
     for s in servers:
         print(f"  {s.name}: served={s.served}")
         s.stop()

@@ -209,27 +209,33 @@ class SlotArbiter:
         With ``policy=None`` the job joins the shared default group (the
         flat pre-arbiter behaviour). With a dedicated policy the job forms
         its own group — this is how one SCHED_COOP job co-locates with a
-        SCHED_FAIR sibling. A dedicated attach requires the job quiescent
-        (no READY/RUNNING tasks): queued work cannot be migrated between
-        policies; BLOCKED tasks are fine and will route to the new policy
-        on wakeup. A quiescent job that was implicitly registered through
-        the default group is *promoted* — detached from it first.
+        SCHED_FAIR sibling. A job already running through the default group
+        is *re-homed live*: its READY tasks are withdrawn from the default
+        policy (``Policy.remove``) and re-queued — exactly once each — in
+        the new group's policy; RUNNING tasks keep their slots and route
+        their next scheduling point to the new policy; BLOCKED tasks route
+        there on wakeup. No dispatch is lost or duplicated: a task is
+        either withdrawn before it could be picked or it was already
+        dispatched, never both.
         """
         existing = self._leases.get(job.jid)
+        if existing is not None and (policy is None or existing.group.dedicated):
+            raise ArbiterError(f"{job} already attached")
+        if policy is not None and (policy is self._default or any(
+            policy is g.policy for g in self._groups
+        )):
+            raise ArbiterError(
+                "dedicated policy instance is already in use by another "
+                "group; pass a fresh instance per job"
+            )
+        share_val = _job_share(job, share)  # validate BEFORE any teardown:
+        # a failed attach must leave the job's queue/lease state untouched
+        migrated: list[Task] = []
         if existing is not None:
-            if policy is None or existing.group.dedicated:
-                raise ArbiterError(f"{job} already attached")
-            # promote an implicitly registered job out of the default group
-            self.detach_job(job)  # includes the quiescence check
+            # promote out of the default group, migrating queued work live
+            migrated = self._withdraw_ready(job, existing.group.policy)
+            self._release_lease(job)
         if policy is not None:
-            self._require_quiescent(job, "attach with a dedicated policy")
-            if policy is self._default or any(
-                policy is g.policy for g in self._groups
-            ):
-                raise ArbiterError(
-                    "dedicated policy instance is already in use by another "
-                    "group; pass a fresh instance per job"
-                )
             if self.sched is not None:
                 policy.attach(self.sched)
             policy.on_job(job)
@@ -239,21 +245,56 @@ class SlotArbiter:
             group = self._default_group
             self._default.on_job(job)
         group.jids.add(job.jid)
-        lease = SlotLease(job, self, group, _job_share(job, share))
+        lease = SlotLease(job, self, group, share_val)
         self._leases[job.jid] = lease
         job.lease = lease
+        for t in migrated:  # re-home the withdrawn READY tasks, once each
+            group.policy.on_ready(t)
+        clock = getattr(self.sched, "clock", None)  # absent on bare stand-ins
+        now = clock() if clock is not None else 0.0
+        for t in job.tasks:
+            # RUNNING tasks keep their slots but must be known to the new
+            # policy as running-since-now (a fresh slice), or a preemptive
+            # policy could never slice-expire them
+            if t.state is TaskState.RUNNING and t.slot is not None:
+                group.policy.on_run(t, t.slot, now)
         self._rebalance()
         return lease
+
+    def _withdraw_ready(self, job: Job, policy: Policy) -> list[Task]:
+        """Surrender ``job``'s queued tasks from ``policy`` (live migration).
+        Every READY task of an attached job is queued in its group's policy,
+        so the withdrawal is total: afterwards the policy holds none of the
+        job's work and its incremental accounting matches a never-admitted
+        pool."""
+        ready = [t for t in job.tasks if t.state is TaskState.READY]
+        if ready and type(policy).remove is Policy.remove:
+            # checked BEFORE touching the queue: a partial withdrawal from
+            # a legacy policy (no remove()) must not corrupt its state
+            raise ArbiterError(
+                f"{policy.name} does not implement Policy.remove: cannot "
+                f"live-migrate {job}'s queued tasks; attach before "
+                "submitting work or implement remove()"
+            )
+        for t in ready:
+            policy.remove(t)
+        return ready
 
     def detach_job(self, job: Job) -> None:
         """Unregister ``job`` and release its lease (dynamic re-registration:
         a later submit — or a blocked task waking up — re-attaches the job
         to the default group)."""
-        lease = self._leases.get(job.jid)
-        if lease is None:
+        if job.jid not in self._leases:
             raise ArbiterError(f"{job} is not attached")
         self._require_quiescent(job, "detach")
-        del self._leases[job.jid]
+        self._release_lease(job)
+        self._rebalance()
+
+    def _release_lease(self, job: Job) -> ArbiterGroup:
+        """Tear down ``job``'s lease binding (shared by detach and the live
+        re-home path of attach); returns the group the job left. The caller
+        rebalances."""
+        lease = self._leases.pop(job.jid)
         job.lease = None
         group = lease.group
         group.jids.discard(job.jid)
@@ -261,7 +302,7 @@ class SlotArbiter:
             self._groups.remove(group)
         else:
             self._default.on_job_detach(job)
-        self._rebalance()
+        return group
 
     def _require_quiescent(self, job: Job, what: str) -> None:
         for t in job.tasks:
@@ -391,10 +432,47 @@ class SlotArbiter:
             return None
         candidates.sort()
         for _, _, g in candidates:
-            task = g.policy.pick(slot_id)
+            if not g.dedicated and len(g.jids) > 1:
+                task = self._pick_shared_group(g, slot_id)
+            else:
+                task = g.policy.pick(slot_id)
             if task is not None:
                 return task
         return None
+
+    def _pick_shared_group(self, g: ArbiterGroup, slot_id: int
+                           ) -> Optional[Task]:
+        """Per-job lease enforcement inside a shared (default) group: the
+        job-granular I5 analogue — no member job is granted a slot beyond
+        its own lease while a sibling member has ready tasks and spare
+        lease. When that situation holds, the grant is restricted to the
+        under-lease members via a job-filtered pick; otherwise the group's
+        policy picks freely (work-conserving borrowing between members).
+        """
+        policy = g.policy
+        try:
+            allowed: Optional[set[int]] = None
+            over = False
+            leases = self._leases
+            for jid in g.jids:
+                lease = leases[jid]
+                if not policy.ready_count_of(lease.job):
+                    continue
+                if lease.in_use < lease.quota:
+                    if allowed is None:
+                        allowed = set()
+                    allowed.add(jid)
+                else:
+                    over = True
+            if allowed and over:
+                task = policy.pick_filtered(slot_id, allowed)
+                if task is not None:
+                    return task
+        except NotImplementedError:
+            # legacy custom policy without the job-filtered surface: keep
+            # the pre-PR-3 group-granular behaviour instead of crashing
+            pass
+        return policy.pick(slot_id)
 
     def _on_ready_single(self, task: Task) -> None:
         lease = task.job.lease

@@ -135,8 +135,16 @@ class SimExecutor:
     def attach(self, job: Job, *, policy: Optional[Policy] = None,
                share: Optional[float] = None):
         """nosv_attach: register ``job`` with an optional dedicated
-        intra-job policy + slot share; returns its ``SlotLease``."""
-        return self.sched.attach_job(job, policy=policy, share=share)
+        intra-job policy + slot share; returns its ``SlotLease``. A job
+        with queued/running work is re-homed live (see SlotArbiter); tasks
+        already running under a newly preemptive policy get their slots'
+        preemption ticks armed here (new dispatches arm themselves)."""
+        lease = self.sched.attach_job(job, policy=policy, share=share)
+        pol = self.sched.policy_of(job)
+        if pol.preemptive and pol.tick_interval is not None:
+            for slot_id in self.sched.slots_running(job):
+                self._arm_tick(slot_id, self.sched.running_on(slot_id))
+        return lease
 
     def detach(self, job: Job) -> None:
         """nosv_detach: unregister a quiescent job, releasing its lease."""

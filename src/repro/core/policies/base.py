@@ -9,7 +9,7 @@ enforces the framework invariants around it.
 from __future__ import annotations
 
 import enum
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING, AbstractSet, Optional
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.scheduler import Scheduler
@@ -64,8 +64,35 @@ class Policy:
     def should_preempt(self, task: "Task", slot_id: int, now: float) -> bool:
         return False
 
+    # -- migration support (live job re-homing, arbiter attach) ---------- #
+    def remove(self, task: "Task") -> None:
+        """Detach a READY task from the pool without dispatching it.
+
+        The inverse of ``on_ready``: after ``remove`` the task is no longer
+        pickable here and all incremental pool accounting must be as if it
+        had never been admitted. The arbiter uses this to surrender one
+        job's queued tasks when the job re-homes to another policy group.
+        Raises ``KeyError`` if the task is not queued here.
+        """
+        raise NotImplementedError
+
+    def pick_filtered(
+        self, slot_id: int, allowed_jids: AbstractSet[int]
+    ) -> Optional["Task"]:
+        """Like ``pick`` but only tasks of jobs in ``allowed_jids`` may be
+        returned. Used for per-job lease enforcement inside a shared group:
+        the arbiter restricts the grant to under-lease member jobs while a
+        sibling member is over its lease (the job-granular I5 analogue).
+        """
+        raise NotImplementedError
+
     # -- introspection --------------------------------------------------- #
     def ready_count(self) -> int:
+        raise NotImplementedError
+
+    def ready_count_of(self, job: "Job") -> int:
+        """READY tasks of one job queued in this policy (job-filtered pick
+        and migration support; policies keep this O(1))."""
         raise NotImplementedError
 
     def has_ready(self) -> bool:

@@ -65,6 +65,24 @@ class _JobQueues:
                 return q.popleft()
         return None
 
+    def withdraw(self, task: Task) -> bool:
+        """Remove one specific queued task (migration support)."""
+        q = self.per_slot.get(task.last_slot)
+        if q is not None:
+            try:
+                q.remove(task)
+            except ValueError:
+                pass
+            else:
+                self.size -= 1
+                return True
+        try:
+            self.unaffine.remove(task)
+        except ValueError:
+            return False
+        self.size -= 1
+        return True
+
 
 class SchedCoop(Policy):
     name = "SCHED_COOP"
@@ -107,6 +125,11 @@ class SchedCoop(Policy):
     def on_ready(self, task: Task) -> None:
         self.on_job(task.job)
         self._jobs[task.job.jid].push(task)
+
+    def remove(self, task: Task) -> None:
+        jq = self._jobs.get(task.job.jid)
+        if jq is None or not jq.withdraw(task):
+            raise KeyError(f"{task} is not queued in {self.name}")
 
     def _job_quantum(self, jid: int) -> float:
         q = self._jobs[jid].job.quantum
@@ -151,6 +174,27 @@ class SchedCoop(Policy):
                     return task
         return None
 
+    def pick_filtered(self, slot_id: int, allowed_jids) -> Optional[Task]:
+        """``pick`` restricted to member jobs in ``allowed_jids`` (per-job
+        lease enforcement inside a shared group); same rotation order."""
+        self._rotate_if_expired()
+        assert self.sched is not None
+        neighbors = self.sched.topology.neighbors_first(slot_id)
+        jobs = self._jobs
+        jids = self._jid_list
+        n = len(jids)
+        start = self._jid_pos.get(self._current_jid, 0)
+        for off in range(n):
+            jid = jids[(start + off) % n]
+            if jid not in allowed_jids:
+                continue
+            jq = jobs[jid]
+            if jq.size:
+                task = jq.pop_for(slot_id, neighbors)
+                if task is not None:
+                    return task
+        return None
+
     # -- accounting --------------------------------------------------------- #
     def on_stop(
         self, task: Task, slot_id: int, now: float, elapsed: float, reason: StopReason
@@ -161,3 +205,7 @@ class SchedCoop(Policy):
     # -- introspection ------------------------------------------------------- #
     def ready_count(self) -> int:
         return sum(j.size for j in self._jobs.values())
+
+    def ready_count_of(self, job: Job) -> int:
+        jq = self._jobs.get(job.jid)
+        return jq.size if jq is not None else 0

@@ -79,6 +79,8 @@ class SchedFair(Policy):
         #: tid -> live entry seq; an entry (key, seq, task) is stale unless
         #: ``_live.get(task.tid) == seq`` (lazy invalidation)
         self._live: dict[int, int] = {}
+        #: jid -> READY tasks of that job in the pool (job-filtered picks)
+        self._per_job: dict[int, int] = {}
         self._dl_all: list[tuple[float, int, Task]] = []
         #: last_slot (int | None) -> deadline heap of that affinity bucket
         self._dl_by_slot: dict[Optional[int], list[tuple[float, int, Task]]] = {}
@@ -137,6 +139,12 @@ class SchedFair(Policy):
         """Invalidate a picked task's entries and update the pool sums."""
         task = entry[2]
         del self._live[task.tid]
+        jid = task.job.jid
+        left = self._per_job[jid] - 1
+        if left:
+            self._per_job[jid] = left
+        else:
+            del self._per_job[jid]
         w = self._w(task)
         self._nready -= 1
         if self._nready == 0:
@@ -210,8 +218,18 @@ class SchedFair(Policy):
         heappush(bucket, entry)
         heappush(self._vr_heap, (vr, seq, task))
         self._nready += 1
+        jid = task.job.jid
+        self._per_job[jid] = self._per_job.get(jid, 0) + 1
         self._wsum += w
         self._wvsum += vr * w
+
+    def remove(self, task: Task) -> None:
+        """Detach a READY task (live migration): same sum/heap maintenance
+        as a pick-removal — the heap tokens go stale and are dropped
+        lazily, so incremental V stays exact vs the reference policy."""
+        if self._live.get(task.tid) is None:
+            raise KeyError(f"{task} is not queued in {self.name}")
+        self._remove((0.0, 0, task))
 
     def pick(self, slot_id: int) -> Optional[Task]:
         if self._nready == 0:
@@ -237,6 +255,47 @@ class SchedFair(Policy):
         assert best is not None  # _nready > 0 implies a live entry exists
         return self._remove(best)
 
+    def pick_filtered(self, slot_id: int, allowed_jids) -> Optional[Task]:
+        """EEVDF pick restricted to jobs in ``allowed_jids``.
+
+        Scans the global deadline heap in order (heap pops come sorted):
+        the first live allowed *eligible* entry wins; the first live
+        allowed entry seen is the min-deadline fallback when nothing
+        allowed is eligible. Popped live entries are pushed back. The
+        wake-affinity preference is skipped on this path — it only runs
+        under per-job lease enforcement, where fairness of the restricted
+        grant matters more than slot warmth.
+        """
+        if self._nready == 0:
+            return None
+        vmax = self._wvsum / self._wsum + _ELIGIBLE_EPS
+        heap = self._dl_all
+        live = self._live
+        vruntime = self._vruntime
+        buf: list = []
+        chosen = None
+        fallback = None
+        while heap:
+            entry = heappop(heap)
+            if live.get(entry[2].tid) != entry[1]:
+                continue  # stale: dropped for good
+            buf.append(entry)
+            if entry[2].job.jid not in allowed_jids:
+                continue
+            if vruntime[entry[2].tid] <= vmax:
+                chosen = entry
+                break
+            if fallback is None:
+                fallback = entry
+        if chosen is None:
+            chosen = fallback
+        for entry in buf:
+            if entry is not chosen:
+                heappush(heap, entry)
+        if chosen is None:
+            return None
+        return self._remove(chosen)
+
     def on_run(self, task: Task, slot_id: int, now: float) -> None:
         self._run_started[task.tid] = now
 
@@ -260,3 +319,6 @@ class SchedFair(Policy):
 
     def ready_count(self) -> int:
         return self._nready
+
+    def ready_count_of(self, job) -> int:
+        return self._per_job.get(job.jid, 0)

@@ -26,12 +26,44 @@ class SchedRR(Policy):
         self.tick_interval = quantum
         self._q: Deque[Task] = deque()
         self._run_started: dict[int, float] = {}
+        self._per_job: dict[int, int] = {}
 
     def on_ready(self, task: Task) -> None:
         self._q.append(task)
+        jid = task.job.jid
+        self._per_job[jid] = self._per_job.get(jid, 0) + 1
+
+    def _drop_count(self, task: Task) -> None:
+        jid = task.job.jid
+        left = self._per_job[jid] - 1
+        if left:
+            self._per_job[jid] = left
+        else:
+            del self._per_job[jid]
 
     def pick(self, slot_id: int) -> Optional[Task]:
-        return self._q.popleft() if self._q else None
+        if not self._q:
+            return None
+        task = self._q.popleft()
+        self._drop_count(task)
+        return task
+
+    def pick_filtered(self, slot_id: int, allowed_jids) -> Optional[Task]:
+        """First-in-FIFO task of an allowed job (O(n) scan: the filtered
+        path only runs under per-job lease enforcement)."""
+        for task in self._q:
+            if task.job.jid in allowed_jids:
+                self._q.remove(task)
+                self._drop_count(task)
+                return task
+        return None
+
+    def remove(self, task: Task) -> None:
+        try:
+            self._q.remove(task)
+        except ValueError:
+            raise KeyError(f"{task} is not queued in {self.name}") from None
+        self._drop_count(task)
 
     def on_run(self, task: Task, slot_id: int, now: float) -> None:
         self._run_started[task.tid] = now
@@ -43,3 +75,6 @@ class SchedRR(Policy):
 
     def ready_count(self) -> int:
         return len(self._q)
+
+    def ready_count_of(self, job) -> int:
+        return self._per_job.get(job.jid, 0)

@@ -46,12 +46,16 @@ class SchedulerError(RuntimeError):
 
 
 class _SlotState:
-    __slots__ = ("running", "run_started", "idle_since")
+    __slots__ = ("running", "run_started", "idle_since", "need_resched")
 
     def __init__(self) -> None:
         self.running: Optional[Task] = None
         self.run_started: float = 0.0
         self.idle_since: float = 0.0
+        #: set by request_preempt (watchdog tick / lease revocation); the
+        #: running task's next scheduling point or explicit checkpoint
+        #: consumes it and converts into a preempt/yield
+        self.need_resched: bool = False
 
 
 class Scheduler:
@@ -239,6 +243,64 @@ class Scheduler:
             return self.arbiter.should_preempt(st.running, slot_id, self.clock())
 
     # ------------------------------------------------------------------ #
+    # deferred preemption (real-thread tick driver)
+    # ------------------------------------------------------------------ #
+    def tick_request(self, slot_id: int) -> bool:
+        """``tick`` + ``request_preempt`` under ONE lock acquisition: the
+        watchdog uses this so the need-resched flag can only land on the
+        task the verdict was about — with two separate calls the slot
+        could swap in between and a SCHED_COOP task could get flagged."""
+        with self._lock:
+            st = self._slots[slot_id]
+            task = st.running
+            if task is None:
+                return False
+            if not self.arbiter.should_preempt(task, slot_id, self.clock()):
+                return False
+            st.need_resched = True
+            return True
+
+    def request_preempt(self, slot_id: int) -> bool:
+        """Mark the slot need-resched (asynchronous preemption request).
+
+        Real threads cannot be descheduled from outside: the watchdog tick
+        driver calls this instead, and the running task's *next* scheduling
+        point — or an explicit ``usf.checkpoint()`` preemption point —
+        consumes the flag and converts into a preempt (I2: only ever
+        requested for preemptive-policy tasks). Returns False if the slot
+        was already idle (nothing to preempt)."""
+        with self._lock:
+            st = self._slots[slot_id]
+            if st.running is None:
+                return False
+            st.need_resched = True
+            return True
+
+    def preempt_requested(self, task: Task) -> bool:
+        """Lock-free peek for the checkpoint fast path: a stale read is
+        benign (``consume_preempt`` re-checks under the lock)."""
+        slot = task.slot
+        return slot is not None and self._slots[slot].need_resched
+
+    def consume_preempt(self, task: Task) -> bool:
+        """Explicit preemption point: honour a pending ``request_preempt``.
+
+        Returns True if the task was descheduled (the executor must park it
+        until redispatch); the pending request converts into a ``preempt``
+        for preemptive intra-job policies and a plain ``yield_`` otherwise
+        (only reachable through a user-placed checkpoint in a cooperative
+        task — the watchdog never flags SCHED_COOP slots)."""
+        with self._lock:
+            slot = task.slot
+            if slot is None or not self._slots[slot].need_resched:
+                return False
+            if self.arbiter.policy_of(task.job).preemptive:
+                self.preempt(task)
+            else:
+                self.yield_(task)
+            return True
+
+    # ------------------------------------------------------------------ #
     # internals
     # ------------------------------------------------------------------ #
     def _make_ready(self, task: Task, now: float) -> None:
@@ -259,6 +321,7 @@ class Scheduler:
         task.job.service_time += elapsed
         self.arbiter.on_stop(task, slot, now, elapsed, reason)
         st.running = None
+        st.need_resched = False  # any scheduling point satisfies the request
         st.idle_since = now
         self._idle.add(slot)
         task.slot = None
@@ -317,6 +380,13 @@ class Scheduler:
     def running_tasks(self) -> list[Optional[Task]]:
         with self._lock:
             return [s.running for s in self._slots]
+
+    def slots_running(self, job: Job) -> list[int]:
+        """Slots currently running ``job``'s tasks (executors use this to
+        arm preemption ticks for a live re-homed job)."""
+        with self._lock:
+            return [i for i, s in enumerate(self._slots)
+                    if s.running is not None and s.running.job is job]
 
     def idle_slot_ids(self) -> list[int]:
         with self._lock:

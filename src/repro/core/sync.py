@@ -210,10 +210,11 @@ class CoopEvent:
         """Wait for the event; returns False on timeout (True otherwise).
 
         Works for both waiter kinds: plain threads time out on the embedded
-        Event; gated tasks arm a timer that withdraws the waiter from the
-        queue and resubmits the task (a timed nosv_pause). A timer firing
-        concurrently with ``set()`` is benign: whichever side dequeues the
-        waiter first wakes it, the other finds it gone."""
+        Event; gated tasks arm a timer on the runtime's watchdog heap that
+        withdraws the waiter from the queue and resubmits the task (a timed
+        nosv_pause — no per-call ``threading.Timer`` thread). A timer
+        firing concurrently with ``set()`` is benign: whichever side
+        dequeues the waiter first wakes it, the other finds it gone."""
         with self._spin:
             if self._set:
                 return True
@@ -243,9 +244,7 @@ class CoopEvent:
                 timed_out[0] = True
             self._rt.ready(task)
 
-        timer = threading.Timer(timeout, expire)
-        timer.daemon = True
-        timer.start()
+        timer = self._rt.call_later(timeout, expire)
         self._rt.pause()
         timer.cancel()
         return self._set or not timed_out[0]

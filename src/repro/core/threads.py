@@ -12,6 +12,13 @@ central Scheduler:
   pth rows).
 * Blocking primitives in ``repro.core.sync`` call ``pause()`` /
   ``ready()`` — the nosv_pause / nosv_submit analogues.
+* A single **watchdog** thread (``UsfRuntime.watchdog``) is the tick
+  driver: it times preemption ticks for slots running preemptive-policy
+  tasks (never SCHED_COOP — I2 per job) and owns the timer heap behind
+  ``sleep()``/timeouts. Ticks become ``request_preempt`` flags that the
+  running task consumes at its next scheduling point or explicit
+  ``checkpoint()`` — user-space preemption the LibPreemptible way: the
+  timer path delivers promptly, the task yields at a safe point.
 * ``gating=False`` turns the runtime into the *Linux baseline*: threads run
   free (oversubscribed), synchronization falls back to plain threading —
   the OS scheduler multiplexes.
@@ -25,6 +32,7 @@ verified in tests/test_threads.py. Worker reuse gives a *new* task a fresh
 
 from __future__ import annotations
 
+import heapq
 import threading
 import time
 from collections import deque
@@ -48,6 +56,193 @@ class UsfTaskError(UsfError):
         super().__init__(f"task {task.name!r} of {task.job.name!r} raised:\n{tb}")
         self.task = task
         self.traceback = tb
+
+
+_WD_CALL = 0  # payload = _TimerHandle (timed wakeup / timeout callback)
+_WD_TICK = 1  # payload = slot_id (preemption tick)
+
+
+class _TimerHandle:
+    """Cancellable one-shot timer entry (threading.Timer analogue, but it
+    lives in the watchdog's heap instead of owning an OS thread)."""
+
+    __slots__ = ("fn", "_wd")
+
+    def __init__(self, fn: Callable[[], None], wd: Optional["_Watchdog"]):
+        self.fn: Optional[Callable[[], None]] = fn
+        self._wd = wd
+
+    def cancel(self) -> None:
+        if self.fn is None:
+            return
+        self.fn = None  # the heap entry fires as a no-op and is dropped
+        if self._wd is not None:
+            self._wd._note_cancel()  # lazy compaction keeps the heap O(live)
+
+
+class _Watchdog:
+    """The real-thread tick driver: ONE timer thread owning a deadline heap.
+
+    Two entry kinds share the heap:
+
+    * **preemption ticks** (per slot, armed only while the slot runs a task
+      whose *own* intra-job policy is preemptive — SCHED_COOP slots are
+      never ticked, keeping I2 per job): on expiry the scheduler is asked
+      ``tick(slot)``; a True answer (slice expiry, or the lease-revocation
+      condition for an over-lease borrower) becomes ``request_preempt``,
+      which the running task consumes at its next scheduling point or
+      explicit ``usf.checkpoint()``. This is what makes preemptive policies
+      and mid-run ``lease.resize()`` reclaim land under real threads.
+    * **timed wakeups** (``call_at``/``call_later``): ``sleep()``, timed
+      ``join()`` and timed waits route here instead of spawning one
+      ``threading.Timer`` thread per call.
+
+    The thread starts lazily on the first armed entry, so a runtime that
+    never sleeps and never attaches a preemptive policy pays nothing.
+    """
+
+    def __init__(self, runtime: "UsfRuntime"):
+        self._rt = runtime
+        self._cv = threading.Condition(threading.Lock())
+        self._heap: list[tuple] = []  # (deadline, seq, kind, payload)
+        self._seq = 0
+        #: slot -> deadline of its authoritative pending tick; heap entries
+        #: whose deadline no longer matches are superseded tokens (a task
+        #: handoff to a shorter-slice policy re-arms EARLIER, it must not
+        #: wait out the previous policy's longer interval)
+        self._tick_next: dict[int, float] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        self._cancelled = 0  # dead call entries since the last compaction
+        #: ticks fired / preemptions requested (introspection + benchmarks)
+        self.ticks_fired = 0
+        self.preempts_requested = 0
+
+    # -- arming (any thread) ------------------------------------------- #
+    def call_at(self, deadline: float, fn: Callable[[], None]) -> _TimerHandle:
+        handle = _TimerHandle(fn, self)
+        with self._cv:
+            if not self._stop:
+                self._push(deadline, _WD_CALL, handle)
+                return handle
+        # stopped runtime: fire degenerately now rather than dropping the
+        # wakeup — a sleeper that would otherwise park forever wakes early
+        fn()
+        return handle
+
+    def _note_cancel(self) -> None:
+        """Compact the heap once cancelled entries dominate: a cancelled
+        long timeout (e.g. a 300 s request deadline that resolved in ms)
+        must not pin its waiter closure until the original deadline."""
+        with self._cv:
+            self._cancelled += 1
+            if self._cancelled <= 32 or 2 * self._cancelled <= len(self._heap):
+                return
+            live = [e for e in self._heap
+                    if e[2] != _WD_CALL or e[3].fn is not None]
+            heapq.heapify(live)
+            self._heap[:] = live  # in place: _main binds the list object
+            self._cancelled = 0
+            self._cv.notify()  # head may have changed: re-time the wait
+
+    def call_later(self, delay: float, fn: Callable[[], None]) -> _TimerHandle:
+        return self.call_at(time.monotonic() + delay, fn)
+
+    def arm_tick(self, slot_id: int, interval: float) -> None:
+        """Arm a preemption tick for the slot unless an equal-or-earlier
+        one is already pending; an earlier request supersedes a later
+        pending tick (its heap token goes stale and is dropped on pop)."""
+        deadline = time.monotonic() + interval
+        with self._cv:
+            cur = self._tick_next.get(slot_id)
+            if cur is not None and cur <= deadline:
+                return
+            self._tick_next[slot_id] = deadline
+            self._push(deadline, _WD_TICK, slot_id)
+
+    def _push(self, deadline: float, kind: int, payload) -> None:
+        # caller holds self._cv
+        if self._stop:
+            return
+        seq = self._seq
+        self._seq = seq + 1
+        entry = (deadline, seq, kind, payload)
+        heapq.heappush(self._heap, entry)
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._main, name="usf-watchdog", daemon=True
+            )
+            self._thread.start()
+        elif self._heap[0] is entry:
+            self._cv.notify()  # new earliest deadline: re-time the wait
+
+    # -- the driver loop ------------------------------------------------ #
+    def _main(self) -> None:
+        heap = self._heap
+        while True:
+            with self._cv:
+                while not self._stop:
+                    if not heap:
+                        self._cv.wait()
+                        continue
+                    delay = heap[0][0] - time.monotonic()
+                    if delay <= 0.0:
+                        break
+                    self._cv.wait(delay)
+                if self._stop:
+                    return
+                entry = heapq.heappop(heap)
+                if entry[2] == _WD_TICK:
+                    sid = entry[3]
+                    if self._tick_next.get(sid) != entry[0]:
+                        continue  # superseded by an earlier re-arm
+                    del self._tick_next[sid]
+            try:
+                self._fire(entry)  # outside the watchdog lock
+            except Exception:  # one bad callback must not kill the driver:
+                # every later sleep()/timeout/preemption rides this thread
+                import sys
+                import traceback
+
+                print("usf-watchdog: timer callback raised:\n"
+                      + traceback.format_exc(), file=sys.stderr)
+
+    def _fire(self, entry: tuple) -> None:
+        kind = entry[2]
+        if kind == _WD_CALL:
+            fn = entry[3].fn
+            if fn is not None:
+                fn()
+            return
+        slot_id = entry[3]
+        sched = self._rt.sched
+        self.ticks_fired += 1
+        if sched.tick_request(slot_id):  # verdict + flag under one lock
+            self.preempts_requested += 1
+        # re-arm while the slot still runs a preemptive-policy task (the
+        # flagged task keeps its slot until it reaches a preemption point)
+        task = sched.running_on(slot_id)
+        if task is not None:
+            pol = sched.policy_of(task.job)
+            if pol.preemptive and pol.tick_interval:
+                self.arm_tick(slot_id, pol.tick_interval)
+
+    def stop(self, timeout: float = 5.0) -> None:
+        with self._cv:
+            self._stop = True
+            # keep the pending timed wakeups: ticks may be dropped, but a
+            # sleeper/timeout waiter must never be left parked forever
+            pending = [e for e in self._heap if e[2] == _WD_CALL]
+            self._heap.clear()
+            self._tick_next.clear()
+            self._cv.notify_all()
+        t = self._thread
+        if t is not None:
+            t.join(timeout)
+        for entry in pending:  # fire early (after the thread quit: no dupes)
+            fn = entry[3].fn
+            if fn is not None:
+                fn()
 
 
 class _Worker:
@@ -95,6 +290,12 @@ class UsfRuntime:
         self._shutdown = False
         self.cache_hits = 0
         self.cache_misses = 0
+        #: the tick driver (single watchdog thread, started lazily)
+        self.watchdog = _Watchdog(self)
+        #: True once any attached (or default) intra-job policy is
+        #: preemptive: gates the per-dispatch policy lookup so purely
+        #: cooperative runtimes pay nothing for the tick driver
+        self._ticks_enabled = bool(policy.preemptive and policy.tick_interval)
         self.sched = Scheduler(
             topology,
             policy,
@@ -159,11 +360,9 @@ class UsfRuntime:
                 self._check_task_exc(task)
                 return True
             task.on_done.append(wake_once)
-        timer: Optional[threading.Timer] = None
+        timer: Optional[_TimerHandle] = None
         if timeout is not None:
-            timer = threading.Timer(timeout, wake_once)
-            timer.daemon = True
-            timer.start()
+            timer = self.watchdog.call_later(timeout, wake_once)
         self.sched.block(cur)
         self._park(cur)
         if timer is not None:
@@ -184,11 +383,24 @@ class UsfRuntime:
     def attach(self, job: Job, *, policy: Optional[Policy] = None,
                share: Optional[float] = None):
         """Register ``job`` with an optional dedicated intra-job policy and
-        slot share; returns its ``SlotLease``. In the real-thread runtime,
-        lease reclaim is honoured at scheduling points (block/yield/finish):
-        there is no tick driver here, so shrunk leases of busy cooperative
-        jobs take effect at the job's next blocking point."""
-        return self.sched.attach_job(job, policy=policy, share=share)
+        slot share; returns its ``SlotLease``.
+
+        A job already running through the default group is re-homed LIVE:
+        queued tasks migrate to the new policy, running tasks keep their
+        slots and route later scheduling points there. Preemptive policies
+        get watchdog ticks: slice expiry and lease reclaim land within one
+        tick period at the task's next scheduling point or checkpoint
+        (SCHED_COOP jobs are never ticked — reclaim from them waits for
+        their next blocking point, I2)."""
+        lease = self.sched.attach_job(job, policy=policy, share=share)
+        pol = self.sched.policy_of(job)
+        if pol.preemptive and pol.tick_interval:
+            self._ticks_enabled = True
+            # re-homed RUNNING tasks were dispatched before the policy
+            # switch: arm their slots now (new dispatches arm themselves)
+            for slot_id in self.sched.slots_running(job):
+                self.watchdog.arm_tick(slot_id, pol.tick_interval)
+        return lease
 
     def detach(self, job: Job) -> None:
         """Unregister a quiescent job, releasing its lease to the siblings."""
@@ -222,13 +434,26 @@ class UsfRuntime:
         self._park(task)
 
     def sleep(self, seconds: float) -> None:
-        """nosv_waitfor: timed block; auto-resubmitted when the timer fires."""
+        """nosv_waitfor: timed block; auto-resubmitted when the watchdog's
+        timer heap fires (one shared thread, not a Timer thread per call)."""
         task = self._require_task()
-        timer = threading.Timer(seconds, lambda: self.sched.unblock(task))
-        timer.daemon = True
-        timer.start()
+        self.watchdog.call_later(seconds, lambda: self.sched.unblock(task))
         self.sched.block(task)
         self._park(task)
+
+    def call_later(self, delay: float, fn: Callable[[], None]) -> _TimerHandle:
+        """Timed callback on the watchdog's shared timer heap (the
+        ``threading.Timer`` replacement used by the sync primitives)."""
+        return self.watchdog.call_later(delay, fn)
+
+    def checkpoint(self) -> None:
+        """Explicit preemption point (LibPreemptible-style): a compute loop
+        that never blocks calls this periodically; it is a cheap flag check
+        unless the watchdog marked the slot need-resched, in which case the
+        task yields the slot here and parks until redispatched."""
+        task = self._require_task()
+        if self.sched.preempt_requested(task) and self.sched.consume_preempt(task):
+            self._park(task)
 
     def task_local(self) -> dict:
         """Per-task storage (fresh per task even on worker reuse)."""
@@ -240,6 +465,7 @@ class UsfRuntime:
     def shutdown(self, timeout: float = 10.0) -> None:
         """Unpark, detach and truly join all cached workers (§4.3.1)."""
         self._shutdown = True
+        self.watchdog.stop()
         with self._cache_lock:
             workers = list(self._all_workers)
             self._cache.clear()
@@ -254,6 +480,8 @@ class UsfRuntime:
         s["cache_hits"] = self.cache_hits
         s["cache_misses"] = self.cache_misses
         s["workers"] = len(self._all_workers)
+        s["watchdog_ticks"] = self.watchdog.ticks_fired
+        s["watchdog_preempt_requests"] = self.watchdog.preempts_requested
         return s
 
     # ------------------------------------------------------------------ #
@@ -282,6 +510,10 @@ class UsfRuntime:
 
     def _on_dispatch(self, task: Task, slot_id: int) -> None:
         task._resume_sem.release()  # type: ignore[attr-defined]
+        if self._ticks_enabled:
+            pol = self.sched.policy_of(task.job)
+            if pol.preemptive and pol.tick_interval:
+                self.watchdog.arm_tick(slot_id, pol.tick_interval)
 
     def _worker_main(self, worker: _Worker) -> None:
         while True:

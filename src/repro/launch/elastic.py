@@ -7,6 +7,12 @@ demonstration compiles the same arch on (16,16) and on a degraded (8,16)
 mesh (128 survivors) and proves both lower+compile with the same
 checkpointed state tree.
 
+Device reclaim and slot reclaim share one path: each mesh transition is
+emitted as a ``repro.launch.rescale.MeshRescaleEvent``, and an optional
+``ElasticCoordinator`` applies it to registered jobs' slot leases
+(``SlotLease.resize``) — a job that loses half its devices surrenders the
+matching fraction of its CPU-side slot share to co-located siblings.
+
 Usage:
     REPRO_DRYRUN_DEVICES=512 PYTHONPATH=src \
         python -m repro.launch.elastic --arch smollm_360m
@@ -30,10 +36,17 @@ from repro.launch.mesh import make_mesh
 
 
 def elastic_demo(arch_id: str, shape_name: str = "train_4k",
-                 verbose: bool = True) -> dict:
+                 verbose: bool = True, coordinator=None) -> dict:
+    """Compile on the full and degraded meshes; with a ``coordinator``
+    (``repro.launch.rescale.ElasticCoordinator``) every mesh transition is
+    also applied to the registered jobs' slot leases, so the scheduler-side
+    share shrinks in step with the device-side capacity."""
+    from repro.launch.rescale import MeshRescaleEvent
+
     cfg = get_arch(arch_id)
     shape = SHAPES[shape_name]
     results = {}
+    prev_shape = None
     for name, mesh_shape in (("full_16x16", (16, 16)),
                              ("degraded_8x16", (8, 16))):
         mesh = make_mesh(mesh_shape, ("data", "model"))
@@ -44,6 +57,15 @@ def elastic_demo(arch_id: str, shape_name: str = "train_4k",
             print(f"[elastic] {arch_id} {shape_name} on {name}: "
                   f"compile {times['compile_s']}s, "
                   f"peak {mem['peak_bytes_est']/2**30:.2f} GiB/chip")
+        if coordinator is not None and prev_shape is not None:
+            event = MeshRescaleEvent(prev_shape, mesh_shape)
+            shares = coordinator.on_rescale(event)
+            results[name]["lease_shares"] = shares
+            if verbose:
+                print(f"[elastic] rescale {event.old_devices}->"
+                      f"{event.new_devices} devices: slot leases resized "
+                      f"to {shares}")
+        prev_shape = mesh_shape
     return results
 
 

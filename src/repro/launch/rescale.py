@@ -1,0 +1,82 @@
+"""Mesh rescale → slot-lease resize: one elastic path for devices & slots.
+
+``repro.launch.elastic`` demonstrates device-level elasticity: a run
+continues on a degraded mesh after losing capacity. The job-level
+``SlotArbiter`` exposes the same elastic primitive for *slots*
+(``SlotLease.resize``). This module wires the two together so device
+reclaim and slot reclaim share one path: a ``MeshRescaleEvent`` (devices
+lost or regained) is applied proportionally to the job's slot lease — a
+job that just lost half its mesh also surrenders half its CPU-side slot
+share to its co-located siblings, and regains it when the mesh regrows.
+
+Reclaim semantics are the lease's: grants fill idle slots immediately;
+reclaims land at the borrower's next scheduling point, or within one
+watchdog/sim tick period for preemptive intra-job policies (SCHED_COOP
+jobs are never preempted for reclaim — I2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import TYPE_CHECKING, Iterable
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.arbiter import SlotLease
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRescaleEvent:
+    """A mesh shape change (node failure, capacity reclaim, or regrowth)."""
+
+    old_shape: tuple[int, ...]
+    new_shape: tuple[int, ...]
+
+    @property
+    def old_devices(self) -> int:
+        return math.prod(self.old_shape)
+
+    @property
+    def new_devices(self) -> int:
+        return math.prod(self.new_shape)
+
+    @property
+    def scale(self) -> float:
+        """Surviving-device fraction (may exceed 1.0 on regrowth)."""
+        if self.old_devices <= 0:
+            raise ValueError(f"empty source mesh {self.old_shape}")
+        return self.new_devices / self.old_devices
+
+
+def apply_rescale(lease: "SlotLease", event: MeshRescaleEvent) -> float:
+    """Resize ``lease`` in proportion to the event's device change; returns
+    the new share. The arbiter re-apportions quotas under its scheduler's
+    lock, so this is safe to call from a rescale-monitoring thread."""
+    new_share = lease.share * event.scale
+    lease.resize(new_share)
+    return new_share
+
+
+class ElasticCoordinator:
+    """Fans one mesh-rescale event out to every registered job lease.
+
+    The launch layer (``repro.launch.elastic``) owns mesh transitions; the
+    scheduling layer owns slot leases. The coordinator is the seam between
+    them: ``register`` the leases of jobs whose slot share should track
+    their device share, then call ``on_rescale`` whenever the mesh changes.
+    """
+
+    def __init__(self) -> None:
+        self._leases: list["SlotLease"] = []
+
+    def register(self, lease: "SlotLease") -> "SlotLease":
+        self._leases.append(lease)
+        return lease
+
+    def leases(self) -> Iterable["SlotLease"]:
+        return tuple(self._leases)
+
+    def on_rescale(self, event: MeshRescaleEvent) -> dict[str, float]:
+        """Apply the event to every registered lease; returns the new
+        shares keyed by job name."""
+        return {l.job.name: apply_rescale(l, event) for l in self._leases}

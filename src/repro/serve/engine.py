@@ -93,15 +93,18 @@ class InferenceServer:
         return req
 
     def start(self) -> None:
-        # each server is its own arbiter group: a dedicated intra-job policy
-        # under a nice-weighted (or explicit) slot lease
-        if self.job.lease is None:
+        # the worker starts through the shared default group (a warm
+        # server: its loop may already be building batches) and is then
+        # re-homed LIVE into its own arbiter group — a dedicated intra-job
+        # policy under a nice-weighted (or explicit) slot lease. attach
+        # migrates the queued/running worker without draining it.
+        self._task = self.usf.create(self._serve_loop, job=self.job,
+                                     name=f"{self.name}-worker")
+        if self.job.lease is None or not self.job.lease.group.dedicated:
             self.lease = self.usf.attach(
                 self.job, policy=self._policy or SchedCoop(),
                 share=self.job.share,
             )
-        self._task = self.usf.create(self._serve_loop, job=self.job,
-                                     name=f"{self.name}-worker")
 
     def stop(self) -> None:
         self._stop = True

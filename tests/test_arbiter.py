@@ -151,12 +151,21 @@ def test_attach_rejects_duplicate_and_shared_policy_instance():
         sim.attach(job_b, policy=pol)  # policy instance reuse
 
 
-def test_attach_with_dedicated_policy_requires_quiescence():
+def test_attach_with_busy_job_rehomes_live():
+    """A job with READY/RUNNING tasks is migrated into the new group by
+    attach (live re-homing) instead of being rejected; every task still
+    completes exactly once."""
     sim = make_sim(n_slots=1, domains=1)
     job = Job("busy")
-    sim.spawn(job, churn(iters=50))  # submits immediately -> READY/RUNNING
-    with pytest.raises(ArbiterError):
-        sim.attach(job, policy=SchedFair())
+    tasks = [sim.spawn(job, churn(iters=20)) for _ in range(4)]
+    lease = sim.attach(job, policy=SchedFair(slice_s=0.002), share=1.0)
+    assert job.lease is lease and lease.group.dedicated
+    assert sim.sched.policy_of(job).name == "SCHED_FAIR"
+    sim.run()
+    assert all(t.done for t in tasks)
+    # detach still requires quiescence (there is no group to serve leftovers)
+    sim.detach(job)
+    assert job.lease is None
 
 
 # --------------------------------------------------------------------- #

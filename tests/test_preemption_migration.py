@@ -1,0 +1,788 @@
+"""Real-thread preemption engine + live task migration tests.
+
+Covers the four layers of the tick-driver/migration refactor:
+
+* **Policy**: ``remove()`` keeps the incremental EEVDF sums consistent
+  (locksteped against ``RefFair``, the executable spec); job-filtered
+  picks restrict grants to allowed jobs.
+* **Arbiter**: ``attach`` with READY/RUNNING tasks re-homes them live with
+  no lost or duplicated dispatches (seeded property sweep, dispatch-count
+  instrumented); per-job leases are enforced inside the default group.
+* **Scheduler**: ``request_preempt`` marks need-resched; the next
+  scheduling point / explicit checkpoint consumes it exactly once.
+* **Executor**: the watchdog tick driver preempts real threads running
+  preemptive-policy tasks, lands ``lease.resize()`` reclaim within a tick
+  period, never ticks SCHED_COOP tasks, and absorbs timed wakeups
+  (``sleep``/timeouts) without spawning per-call Timer threads.
+"""
+
+import random
+import threading
+import time
+from collections import Counter
+
+import pytest
+
+from repro.core import simtask as st
+from repro.core.events import SimExecutor
+from repro.core.policies import SchedCoop, SchedFair, SchedRR
+from repro.core.policies.base import StopReason
+from repro.core.scheduler import Scheduler
+from repro.core.task import Job, Task, TaskState
+from repro.core.threads import UsfRuntime
+from repro.core.topology import Topology
+
+from tests.test_sched_fastpath import RefFair
+
+# a watchdog tick period generous enough for noisy CI thread wakeups, and
+# a latency bound of a few periods — far below the no-preemption
+# alternative (spinners never yield, so reclaim latency would be infinite)
+TICK = 0.05
+RECLAIM_BOUND = 8 * TICK
+
+
+# --------------------------------------------------------------------- #
+# policy layer: remove() + filtered picks
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(10))
+def test_sched_fair_remove_lockstep_vs_reffair(seed):
+    """Random on_ready/pick/remove/on_stop traces: the incremental
+    SchedFair and the brute-force RefFair must stay bit-identical in pick
+    order, pool size, min_vruntime AND pool virtual time after removes."""
+    rng = random.Random(seed)
+    n_slots = rng.randint(1, 6)
+    jobs = [Job(f"rm{seed}-{i}", nice=rng.choice([0, 0, 5, -5]))
+            for i in range(3)]
+    tasks = [Task(jobs[i % 3]) for i in range(rng.randint(4, 32))]
+    ref, new = RefFair(slice_s=0.002), SchedFair(slice_s=0.002)
+    ref.remove = lambda t: ref._ready.remove(t)  # list spec of remove()
+    now = 0.0
+    queued: list[Task] = []
+    running: dict[int, tuple[Task, int]] = {}
+    for step in range(400):
+        act = rng.random()
+        if act < 0.35 and len(queued) + len(running) < len(tasks):
+            cand = [t for t in tasks
+                    if t not in queued and t.tid not in running]
+            t = rng.choice(cand)
+            t.last_slot = rng.choice([None] + list(range(n_slots)))
+            ref.on_ready(t)
+            new.on_ready(t)
+            queued.append(t)
+        elif act < 0.5 and queued:  # the migration path under test
+            t = rng.choice(queued)
+            queued.remove(t)
+            ref.remove(t)
+            new.remove(t)
+            with pytest.raises(KeyError):
+                new.remove(t)  # double-remove must be refused
+        elif act < 0.8 and queued:
+            slot = rng.randrange(n_slots)
+            a, b = ref.pick(slot), new.pick(slot)
+            assert a is b, f"step {step}: ref {a} vs new {b}"
+            queued.remove(a)
+            running[a.tid] = (a, slot)
+            ref.on_run(a, slot, now)
+            new.on_run(a, slot, now)
+        elif running:
+            tid = rng.choice(sorted(running))
+            t, slot = running.pop(tid)
+            elapsed = rng.uniform(1e-4, 1e-2)
+            now += elapsed
+            t.last_slot = slot
+            ref.on_stop(t, slot, now, elapsed, StopReason.BLOCK)
+            new.on_stop(t, slot, now, elapsed, StopReason.BLOCK)
+        assert ref.ready_count() == new.ready_count()
+        assert ref._min_vruntime == new._min_vruntime
+        if new.ready_count():
+            # incremental pool sums survive removes (the I5 grant inputs)
+            assert ref._pool_virtual_time() == pytest.approx(
+                new._wvsum / new._wsum, abs=1e-9)
+    for job in jobs:
+        got = new.ready_count_of(job)
+        want = sum(1 for t in queued if t.job is job)
+        assert got == want
+
+
+@pytest.mark.parametrize("polname", ["coop", "fair", "rr"])
+def test_pick_filtered_only_returns_allowed_jobs(polname):
+    from types import SimpleNamespace
+
+    pol = {"coop": lambda: SchedCoop(quantum=1.0),
+           "fair": lambda: SchedFair(slice_s=0.002),
+           "rr": lambda: SchedRR(quantum=0.01)}[polname]()
+    pol.attach(SimpleNamespace(topology=Topology(4, 1)))
+    job_a, job_b = Job("allowed"), Job("denied")
+    tasks = [Task(job_a if i % 2 == 0 else job_b) for i in range(12)]
+    for i, t in enumerate(tasks):
+        t.last_slot = None if i % 3 == 0 else i % 4
+        pol.on_ready(t)
+    allowed = {job_a.jid}
+    got = []
+    while True:
+        t = pol.pick_filtered(0, allowed)
+        if t is None:
+            break
+        got.append(t)
+    assert sorted(t.tid for t in got) == sorted(
+        t.tid for t in tasks if t.job is job_a)
+    assert pol.ready_count_of(job_a) == 0
+    assert pol.ready_count_of(job_b) == 6
+    # the denied job's tasks are all still pickable afterwards
+    rest = [pol.pick(0) for _ in range(6)]
+    assert all(t is not None and t.job is job_b for t in rest)
+    assert pol.ready_count() == 0
+
+
+def test_remove_unknown_task_raises():
+    for pol in (SchedCoop(), SchedFair(), SchedRR()):
+        with pytest.raises(KeyError):
+            pol.remove(Task(Job("ghost")))
+
+
+# --------------------------------------------------------------------- #
+# scheduler layer: request_preempt / consume_preempt
+# --------------------------------------------------------------------- #
+def _manual_sched(n_slots=1, policy=None):
+    clock = {"now": 0.0}
+    dispatched = []
+    sched = Scheduler(
+        Topology(n_slots, 1), policy or SchedFair(slice_s=0.003),
+        clock=lambda: clock["now"],
+        dispatch=lambda t, s: dispatched.append((t, s)),
+    )
+    return sched, clock, dispatched
+
+
+def test_request_preempt_consumed_at_checkpoint_exactly_once():
+    sched, clock, dispatched = _manual_sched()
+    job = Job("p")
+    t1, t2 = Task(job), Task(job)
+    sched.submit(t1)
+    sched.submit(t2)
+    assert dispatched == [(t1, 0)]
+    assert not sched.preempt_requested(t1)
+    assert not sched.consume_preempt(t1)  # no pending request: no-op
+    assert sched.request_preempt(0)
+    assert sched.preempt_requested(t1)
+    clock["now"] += 0.01
+    assert sched.consume_preempt(t1)  # converts into a preempt + swap
+    assert t1.stats.preemptions == 1
+    assert t1.state is TaskState.READY
+    assert dispatched[-1] == (t2, 0)
+    assert not sched.consume_preempt(t2)  # flag cleared by the swap
+    assert sched.request_preempt(0)
+    clock["now"] += 0.01
+    sched.block(t2)  # a natural scheduling point also satisfies it
+    assert t2.stats.preemptions == 0
+    assert dispatched[-1] == (t1, 0)
+    assert not sched.preempt_requested(t1)
+
+
+def test_request_preempt_idle_slot_is_refused():
+    sched, _, _ = _manual_sched()
+    assert not sched.request_preempt(0)
+
+
+def test_consume_preempt_cooperative_task_yields_not_preempts():
+    """A user checkpoint in a SCHED_COOP task converts a (spurious)
+    request into a voluntary yield — I2: no preemption is recorded."""
+    sched, clock, dispatched = _manual_sched(policy=SchedCoop())
+    job = Job("c")
+    t1, t2 = Task(job), Task(job)
+    sched.submit(t1)
+    sched.submit(t2)
+    assert sched.request_preempt(0)
+    clock["now"] += 0.01
+    assert sched.consume_preempt(t1)
+    assert t1.stats.preemptions == 0
+    assert t1.stats.yields == 1
+    assert dispatched[-1] == (t2, 0)
+
+
+# --------------------------------------------------------------------- #
+# arbiter layer: live re-homing, exactly-once dispatches
+# --------------------------------------------------------------------- #
+def _instrument_dispatches(sim) -> Counter:
+    counts: Counter = Counter()
+    orig = sim.sched._dispatch_cb
+
+    def wrapped(task, slot_id):
+        counts[task.tid] += 1
+        orig(task, slot_id)
+
+    sim.sched._dispatch_cb = wrapped
+    return counts
+
+
+def _prog_body(rng):
+    prog = [(rng.choice(("compute", "sleep", "yield")),
+             rng.uniform(5e-4, 6e-3))
+            for _ in range(rng.randint(2, 6))]
+
+    def gen():
+        for kind, v in prog:
+            if kind == "compute":
+                yield st.compute(v)
+            elif kind == "sleep":
+                yield st.sleep(v)
+            else:
+                yield st.yield_()
+
+    return gen
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_live_rehoming_exactly_once_property(seed):
+    """Seeded mixed-policy workloads with a mid-run attach of a busy job:
+    every task completes, and the executor saw exactly
+    ``task.stats.dispatches`` dispatch callbacks per task — no dispatch is
+    lost (a lost one deadlocks the sim) and none is duplicated (I1 would
+    trip, and the instrumented counts would diverge)."""
+    rng = random.Random(seed)
+    n_slots = rng.choice((2, 4, 8))
+    sim = SimExecutor(Topology(n_slots, 1), SchedCoop(quantum=0.01),
+                      max_time=600.0)
+    counts = _instrument_dispatches(sim)
+    mover = Job(f"mover{seed}")
+    others = [Job(f"bg{seed}-{i}") for i in range(rng.randint(1, 2))]
+    tasks = []
+    for _ in range(rng.randint(3, 3 * n_slots)):
+        tasks.append(sim.spawn(mover, _prog_body(rng)))
+    for job in others:
+        for _ in range(rng.randint(1, n_slots)):
+            tasks.append(sim.spawn(job, _prog_body(rng)))
+    policy = rng.choice((
+        lambda: SchedCoop(quantum=0.01),
+        lambda: SchedFair(slice_s=0.002),
+        lambda: SchedRR(quantum=0.002),
+    ))()
+    at = rng.uniform(0.0, 0.01)
+
+    sim.run(until=at)  # mover now has a mix of READY/RUNNING/BLOCKED tasks
+    ready_before = sum(1 for t in mover.tasks if t.state is TaskState.READY)
+    lease = sim.attach(mover, policy=policy, share=rng.choice((1.0, 3.0)))
+    assert lease.group.dedicated
+    # the withdrawn READY tasks moved wholesale into the new policy
+    assert policy.ready_count_of(mover) == ready_before
+    assert sim.sched.policy_of(mover) is policy
+    sim.run()
+
+    assert all(t.done for t in tasks), f"seed {seed}: lost dispatches"
+    for t in tasks:
+        assert counts[t.tid] == t.stats.dispatches, (
+            f"seed {seed}: task {t.tid} saw {counts[t.tid]} executor "
+            f"dispatches vs {t.stats.dispatches} accounted")
+    if not policy.preemptive:
+        assert sum(t.stats.preemptions for t in mover.tasks) == 0  # I2
+
+
+def test_live_rehoming_deterministic():
+    def run_once():
+        sim = SimExecutor(Topology(4, 1), SchedCoop(quantum=0.01),
+                          max_time=600.0)
+        rng = random.Random(77)
+        mover, bg = Job("mover"), Job("bg")
+        tasks = [sim.spawn(mover, _prog_body(rng)) for _ in range(6)]
+        tasks += [sim.spawn(bg, _prog_body(rng)) for _ in range(4)]
+        sim.run(until=0.004)
+        sim.attach(mover, policy=SchedFair(slice_s=0.002), share=2.0)
+        s = sim.run()
+        return (s.makespan, s.dispatches, s.preemptions, s.migrations,
+                round(mover.service_time, 9))
+
+    assert run_once() == run_once()
+
+
+def test_rehomed_running_task_gets_ticks_in_sim():
+    """A RUNNING task migrated under a preemptive policy must become
+    preemptible immediately (ticks armed at attach, not next dispatch)."""
+    sim = SimExecutor(Topology(1, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    mover, other = Job("mover"), Job("other")
+
+    def long_compute():
+        yield st.compute(0.5)
+
+    t1 = sim.spawn(mover, long_compute)
+    sim.run(until=0.001)  # t1 is mid-compute on the only slot
+    assert t1.state is TaskState.RUNNING
+    # after these attaches the mover is an over-lease borrower (quota 0,
+    # in_use 1) and `other` holds the slot's lease with ready work: the
+    # lease-revocation tick must kick t1 off mid-compute
+    sim.attach(mover, policy=SchedFair(slice_s=0.002), share=1.0)
+    sim.attach(other, policy=SchedFair(slice_s=0.002), share=3.0)
+    t2 = sim.spawn(other, long_compute)
+    sim.run()
+    assert t1.done and t2.done
+    # without the attach-time arm, t1's 0.5s compute would finish untouched
+    assert t1.stats.preemptions > 0
+    # interleaving: t2 first ran long before t1's compute could have ended
+    assert t2.stats.first_run_at < 0.1
+
+
+def test_rehomed_running_task_is_slice_preempted():
+    """Regression: migration must register RUNNING tasks with the new
+    policy (on_run), or a preemptive policy can never slice-expire them —
+    a same-job sibling would starve behind an unpreemptible migrant."""
+    sim = SimExecutor(Topology(1, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    job = Job("mover")
+
+    def long_compute():
+        yield st.compute(0.5)
+
+    t1 = sim.spawn(job, long_compute)
+    t2 = sim.spawn(job, long_compute)  # queued behind t1 on the only slot
+    sim.run(until=0.001)
+    assert t1.state is TaskState.RUNNING
+    sim.attach(job, policy=SchedFair(slice_s=0.002), share=1.0)
+    sim.run()
+    assert t1.done and t2.done
+    # slice expiry (not lease revocation — the job is within quota) must
+    # interleave the two: t1 gets preempted, t2 starts within a few slices
+    assert t1.stats.preemptions > 0
+    assert t2.stats.first_run_at < 0.1
+
+
+def test_failed_attach_leaves_job_state_intact():
+    """Regression: a rejected attach (policy reuse / bad share) must not
+    have withdrawn the job's queued tasks or dropped its lease."""
+    sim = SimExecutor(Topology(2, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    job, other = Job("victim"), Job("holder")
+    used_policy = SchedFair(slice_s=0.002)
+    sim.attach(other, policy=used_policy, share=1.0)
+    tasks = [sim.spawn(job, _prog_body(random.Random(5))) for _ in range(4)]
+    sim.run(until=0.002)
+    default_pol = sim.sched.arbiter.default_policy
+    ready_before = default_pol.ready_count_of(job)
+    lease_before = job.lease
+    from repro.core.arbiter import ArbiterError
+
+    with pytest.raises(ArbiterError):
+        sim.attach(job, policy=used_policy)  # instance already in use
+    with pytest.raises(ArbiterError):
+        sim.attach(job, policy=SchedFair(slice_s=0.002), share=-1.0)
+    assert job.lease is lease_before  # untouched
+    assert default_pol.ready_count_of(job) == ready_before
+    sim.run()  # and the workload still completes through the default group
+    assert all(t.done for t in tasks)
+
+
+def test_shutdown_with_sleeping_task_does_not_hang():
+    """Regression: watchdog stop() fires pending timed wakeups early
+    instead of dropping them — a sleeper resumes and the worker takes its
+    poison pill within the shutdown timeout."""
+    rt = UsfRuntime(Topology(1, 1), SchedCoop())
+    job = Job("sleeper")
+    t = rt.create(lambda: rt.sleep(30.0), job=job)
+    deadline = time.monotonic() + 5.0
+    while not t.stats.dispatches and time.monotonic() < deadline:
+        time.sleep(0.01)  # wait until the task is parked in its sleep
+    time.sleep(0.05)
+    t0 = time.monotonic()
+    rt.shutdown(timeout=10.0)
+    assert time.monotonic() - t0 < 5.0, "shutdown hung on a sleeping task"
+    assert t.done  # woke early, finished, worker consumed the poison pill
+
+
+def test_legacy_default_policy_without_new_api_still_works():
+    """Back-compat: a custom default policy implementing only the
+    pre-refactor Policy surface (no remove/pick_filtered/ready_count_of)
+    must keep working in multi-group mode (group-granular fallback), and
+    live re-homing out of it is refused cleanly BEFORE any state is
+    touched."""
+    from repro.core.arbiter import ArbiterError
+
+    sim = SimExecutor(Topology(2, 1), RefFair(slice_s=0.002), max_time=600.0)
+    a, b, c = Job("lega"), Job("legb"), Job("legc")
+    sim.attach(c, policy=SchedCoop(quantum=0.01), share=1.0)  # multi mode
+    rng = random.Random(9)
+    tasks = [sim.spawn(j, _prog_body(rng)) for j in (a, b, a, b, c)]
+    sim.run()  # the 2-member legacy default group must not crash picks
+    assert all(t.done for t in tasks)
+
+    # queue READY work for `a` (2 slots, 3 tasks: at least one stays READY)
+    more = [sim.spawn(a, _prog_body(rng)) for _ in range(3)]
+    assert any(t.state is TaskState.READY for t in a.tasks)
+    with pytest.raises(ArbiterError, match="does not implement"):
+        sim.attach(a, policy=SchedFair(slice_s=0.002), share=1.0)
+    sim.run()  # refused attach left the legacy queue intact
+    assert all(t.done for t in more)
+
+
+def test_per_job_lease_enforcement_inside_default_group():
+    """Two jobs sharing the DEFAULT group at a 3:1 share split: with
+    job-filtered picks their service tracks the per-job leases even though
+    one policy instance multiplexes both (previously group-granular only,
+    i.e. ~1:1 from SCHED_COOP's round-robin)."""
+    sim = SimExecutor(Topology(8, 1), SchedCoop(quantum=0.01), max_time=1e9)
+    heavy, light = Job("heavy", share=3.0), Job("light", share=1.0)
+    dedicated = Job("fairside", share=4.0)
+    sim.attach(dedicated, policy=SchedFair(slice_s=0.003))
+
+    def churn():
+        while True:
+            yield st.compute(0.002)
+            yield st.sleep(0.0005)
+
+    for _ in range(16):
+        sim.spawn(heavy, churn)
+        sim.spawn(light, churn)
+        sim.spawn(dedicated, churn)
+    sim.run(until=1.0)
+    frac_heavy = heavy.service_time / (heavy.service_time + light.service_time)
+    assert 0.65 <= frac_heavy <= 0.85, (
+        f"per-job lease not enforced in default group: {frac_heavy:.3f}")
+
+
+# --------------------------------------------------------------------- #
+# executor layer: the watchdog tick driver on real threads
+# --------------------------------------------------------------------- #
+def _spin_until(rt, stop_event, *, poll=2000):
+    """CPU-bound loop with explicit preemption points (checkpoint)."""
+    n = 0
+    while not stop_event.is_set():
+        n += 1
+        if n % poll == 0:
+            rt.checkpoint()
+        else:
+            # a tiny pure-python burn so the loop is compute-, not
+            # syscall-dominated
+            pass
+
+
+def test_real_thread_preemptive_policy_time_slices():
+    """Two CPU-bound SCHED_FAIR tasks on ONE slot: the watchdog must
+    time-slice them (both run concurrently-ish, both get preempted) —
+    under the old runtime the first task would hold the slot to the end."""
+    rt = UsfRuntime(Topology(1, 1), SchedFair(slice_s=TICK))
+    try:
+        job = Job("fair")
+        stop = threading.Event()
+        started = {}
+
+        def body(name):
+            def fn():
+                started[name] = time.monotonic()
+                _spin_until(rt, stop)
+
+            return fn
+
+        t0 = time.monotonic()
+        t1 = rt.create(body("a"), job=job, name="a")
+        t2 = rt.create(body("b"), job=job, name="b")
+        deadline = time.monotonic() + 10.0
+        while len(started) < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        stop.set()
+        assert rt.join(t1, timeout=10.0) and rt.join(t2, timeout=10.0)
+        assert len(started) == 2, "second task never time-sliced in"
+        # the second task ran while the first was still spinning
+        assert started["b"] - t0 < RECLAIM_BOUND
+        assert t1.stats.preemptions + t2.stats.preemptions >= 1
+        assert rt.watchdog.preempts_requested >= 1
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_watchdog_revokes_borrowed_slot_within_tick_period():
+    """A preemptive job borrowing beyond its lease is kicked off within a
+    tick period once the under-lease coop sibling has ready work."""
+    rt = UsfRuntime(Topology(2, 1), SchedCoop(quantum=0.02))
+    try:
+        borrower, coop = Job("borrower"), Job("coop")
+        rt.attach(borrower, policy=SchedFair(slice_s=TICK), share=1.0)
+        lease_c = rt.attach(coop, policy=SchedCoop(quantum=0.02), share=1.0)
+        assert lease_c.quota == 1
+        stop = threading.Event()
+        spinners = [rt.create(lambda: _spin_until(rt, stop), job=borrower)
+                    for _ in range(2)]  # borrows BOTH slots (sibling idle)
+        deadline = time.monotonic() + 5.0
+        while (len(rt.sched.slots_running(borrower)) < 2
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        assert len(rt.sched.slots_running(borrower)) == 2
+        t_submit = time.monotonic()
+        ran_at = {}
+
+        def coop_body():
+            ran_at["t"] = time.monotonic()
+
+        ct = rt.create(coop_body, job=coop)
+        assert rt.join(ct, timeout=10.0), "lease revocation never landed"
+        latency = ran_at["t"] - t_submit
+        assert latency < RECLAIM_BOUND, (
+            f"revocation took {latency:.3f}s (tick {TICK}s)")
+        assert sum(t.stats.preemptions for t in borrower.tasks) >= 1
+        # I2: the cooperative job itself was never preempted
+        assert sum(t.stats.preemptions for t in coop.tasks) == 0
+        stop.set()
+        for t in spinners:
+            assert rt.join(t, timeout=10.0)
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_lease_resize_reclaim_lands_under_real_threads():
+    """Mid-run ``lease.resize()``: the reclaimed slot is surrendered at
+    the next watchdog tick, not at the borrower's next (never-arriving)
+    blocking point."""
+    rt = UsfRuntime(Topology(2, 1), SchedCoop(quantum=0.02))
+    try:
+        fair, coop = Job("fairjob"), Job("coopjob")
+        lease_f = rt.attach(fair, policy=SchedFair(slice_s=TICK), share=1.0)
+        lease_c = rt.attach(coop, policy=SchedCoop(quantum=0.02), share=0.0)
+        stop = threading.Event()
+        spinners = [rt.create(lambda: _spin_until(rt, stop), job=fair)
+                    for _ in range(2)]
+        # wait until the borrower actually owns BOTH slots: rt.create
+        # returns before the worker submits, so an immediate probe could
+        # legitimately borrow a still-idle slot (work-conserving I5)
+        deadline = time.monotonic() + 5.0
+        while (len(rt.sched.slots_running(fair)) < 2
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        assert len(rt.sched.slots_running(fair)) == 2
+        ran_at = {}
+        ct = rt.create(lambda: ran_at.setdefault("t", time.monotonic()),
+                       job=coop)
+        time.sleep(2 * TICK)
+        assert "t" not in ran_at  # share 0: queued behind the borrower
+        t_resize = time.monotonic()
+        lease_c.resize(1.0)  # reclaim one slot from the fair borrower
+        assert lease_f.quota == 1 and lease_c.quota == 1
+        assert rt.join(ct, timeout=10.0), "resize reclaim never landed"
+        latency = ran_at["t"] - t_resize
+        assert latency < RECLAIM_BOUND, (
+            f"resize reclaim took {latency:.3f}s (tick {TICK}s)")
+        stop.set()
+        for t in spinners:
+            assert rt.join(t, timeout=10.0)
+        assert sum(t.stats.preemptions for t in coop.tasks) == 0
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_coop_slots_are_never_ticked():
+    """Zero preemptions delivered to SCHED_COOP tasks while a preemptive
+    sibling is ticked on its own slots; the coop job's checkpoints stay
+    no-ops."""
+    rt = UsfRuntime(Topology(2, 1), SchedCoop(quantum=0.02))
+    try:
+        coop, fair = Job("c"), Job("f")
+        rt.attach(coop, policy=SchedCoop(quantum=0.02), share=1.0)
+        rt.attach(fair, policy=SchedFair(slice_s=TICK), share=1.0)
+        stop = threading.Event()
+        tasks = [rt.create(lambda: _spin_until(rt, stop), job=coop),
+                 rt.create(lambda: _spin_until(rt, stop), job=fair)]
+        time.sleep(4 * TICK)
+        stop.set()
+        for t in tasks:
+            assert rt.join(t, timeout=10.0)
+        assert sum(t.stats.preemptions for t in coop.tasks) == 0
+        assert sum(t.stats.yields for t in coop.tasks) == 0
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_real_thread_live_rehoming_mid_run():
+    """attach with queued real-thread work: tasks created under the
+    default group migrate to a dedicated preemptive group mid-run and all
+    complete exactly once."""
+    rt = UsfRuntime(Topology(1, 1), SchedCoop(quantum=0.02))
+    try:
+        job = Job("migrant")
+        stop = threading.Event()
+        done = []
+
+        def body(i):
+            def fn():
+                t_end = time.monotonic() + 0.05
+                n = 0
+                while time.monotonic() < t_end and not stop.is_set():
+                    n += 1
+                    if n % 1000 == 0:
+                        rt.checkpoint()
+                done.append(i)
+
+            return fn
+
+        tasks = [rt.create(body(i), job=job) for i in range(4)]
+        time.sleep(0.01)  # some running, some queued in the default group
+        lease = rt.attach(job, policy=SchedFair(slice_s=TICK), share=1.0)
+        assert lease.group.dedicated
+        for t in tasks:
+            assert rt.join(t, timeout=20.0)
+        assert sorted(done) == [0, 1, 2, 3]
+        assert all(t.stats.dispatches >= 1 for t in tasks)
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_sleep_routes_through_watchdog_no_timer_threads():
+    """The timer-churn satellite: N concurrent timed waits use the single
+    watchdog thread, not one threading.Timer thread per call."""
+    rt = UsfRuntime(Topology(2, 1), SchedCoop())
+    try:
+        job = Job("sleepy")
+
+        def body():
+            for _ in range(3):
+                rt.sleep(0.03)
+
+        tasks = [rt.create(body, job=job) for _ in range(6)]
+        time.sleep(0.04)  # mid-flight: 6 pending timed wakeups
+        names = [t.name for t in threading.enumerate()]
+        assert names.count("usf-watchdog") == 1
+        assert not any(isinstance(t, threading.Timer)
+                       for t in threading.enumerate())
+        for t in tasks:
+            assert rt.join(t, timeout=10.0)
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_join_timeout_routes_through_watchdog():
+    rt = UsfRuntime(Topology(2, 1), SchedCoop())
+    try:
+        from repro.core.sync import CoopEvent
+
+        job = Job("j")
+        gate = CoopEvent(rt)
+        hung = rt.create(gate.wait, job=job)
+        res = {}
+
+        def joiner():
+            res["timed_out"] = rt.join(hung, timeout=0.05)
+
+        j = rt.create(joiner, job=job)
+        assert rt.join(j, timeout=10.0)
+        assert res["timed_out"] is False
+        assert not any(isinstance(t, threading.Timer)
+                       for t in threading.enumerate())
+        gate.set()
+        assert rt.join(hung, timeout=10.0)
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_arm_tick_earlier_interval_supersedes_pending():
+    """Regression: a pending long-interval tick (e.g. from a SCHED_RR
+    quantum) must not suppress arming a shorter one when the slot hands
+    off to a short-slice policy — the earlier deadline wins."""
+    rt = UsfRuntime(Topology(1, 1), SchedCoop())
+    try:
+        wd = rt.watchdog
+        wd.arm_tick(0, 10.0)  # long tick pending
+        wd.arm_tick(0, 0.01)  # must supersede, not be deduped away
+        with wd._cv:
+            assert wd._tick_next[0] < time.monotonic() + 1.0
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            if wd.ticks_fired >= 1:
+                break  # the short tick fired; the stale 10s token did not
+            time.sleep(0.005)
+        assert wd.ticks_fired >= 1
+        with wd._cv:
+            assert 0 not in wd._tick_next  # idle slot: not re-armed
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_cancelled_timers_compacted_from_watchdog_heap():
+    """Regression: a cancelled long timeout (e.g. a 300s request deadline
+    that resolved in ms) must not pin its heap entry + waiter closure
+    until the original deadline — cancels trigger lazy compaction."""
+    rt = UsfRuntime(Topology(1, 1), SchedCoop())
+    try:
+        handles = [rt.call_later(300.0, lambda: None) for _ in range(200)]
+        for h in handles:
+            h.cancel()
+        with rt.watchdog._cv:
+            live = len(rt.watchdog._heap)
+        assert live < 100, f"{live} dead 300s entries still pinned"
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_watchdog_survives_raising_callback():
+    """Regression: one bad timer callback must not kill the tick driver
+    (every later sleep/timeout/preemption rides the same thread)."""
+    rt = UsfRuntime(Topology(1, 1), SchedCoop())
+    try:
+        rt.call_later(0.0, lambda: 1 / 0)  # raises inside _fire
+        job = Job("after")
+        t = rt.create(lambda: rt.sleep(0.05), job=job)
+        assert rt.join(t, timeout=10.0)  # timed wakeups still delivered
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_watchdog_idle_when_purely_cooperative():
+    """No preemptive policy, no timed waits: the tick driver costs nothing
+    — not even its thread."""
+    rt = UsfRuntime(Topology(2, 1), SchedCoop())
+    try:
+        job = Job("j")
+        tasks = [rt.create(lambda: None, job=job) for _ in range(4)]
+        for t in tasks:
+            assert rt.join(t, timeout=10.0)
+        assert rt.watchdog.ticks_fired == 0
+        assert "usf-watchdog" not in [t.name for t in threading.enumerate()]
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+# --------------------------------------------------------------------- #
+# elastic: mesh rescale -> lease resize share one path
+# --------------------------------------------------------------------- #
+def test_mesh_rescale_resizes_leases_mid_run():
+    from repro.launch.rescale import ElasticCoordinator, MeshRescaleEvent
+
+    sim = SimExecutor(Topology(8, 1), SchedCoop(quantum=0.01), max_time=1e9)
+    train, serve = Job("train"), Job("serve")
+    coord = ElasticCoordinator()
+    lease_t = coord.register(
+        sim.attach(train, policy=SchedCoop(quantum=0.01), share=6.0))
+    lease_s = sim.attach(serve, policy=SchedFair(slice_s=0.002), share=2.0)
+    assert (lease_t.quota, lease_s.quota) == (6, 2)
+
+    def churn():
+        while True:
+            yield st.compute(0.002)
+            yield st.sleep(0.0005)
+
+    for _ in range(16):
+        sim.spawn(train, churn)
+        sim.spawn(serve, churn)
+    sim.run(until=0.25)
+    w1 = (train.service_time, serve.service_time)
+
+    event = MeshRescaleEvent((16, 16), (8, 16))  # lost half the devices
+    assert event.scale == 0.5
+    shares = coord.on_rescale(event)
+    assert shares == {"train": 3.0}
+    assert lease_t.share == 3.0
+    assert (lease_t.quota, lease_s.quota) == (5, 3)  # 3:2 of 8 slots
+
+    sim.run(until=0.5)
+    w2 = (train.service_time - w1[0], serve.service_time - w1[1])
+    frac1 = w1[0] / sum(w1)
+    frac2 = w2[0] / sum(w2)
+    assert frac1 > 0.70          # 6:2 split before the event
+    assert frac2 < frac1 - 0.05  # reclaim visibly landed after it
+
+
+def test_mesh_rescale_regrow_restores_share():
+    from repro.launch.rescale import ElasticCoordinator, MeshRescaleEvent
+
+    sim = SimExecutor(Topology(4, 1), SchedCoop(quantum=0.01), max_time=1e9)
+    job = Job("train")
+    coord = ElasticCoordinator()
+    lease = coord.register(
+        sim.attach(job, policy=SchedCoop(quantum=0.01), share=4.0))
+    coord.on_rescale(MeshRescaleEvent((16, 16), (8, 16)))
+    assert lease.share == 2.0
+    coord.on_rescale(MeshRescaleEvent((8, 16), (16, 16)))
+    assert lease.share == 4.0
+    with pytest.raises(ValueError):
+        MeshRescaleEvent((0,), (8,)).scale
