@@ -47,7 +47,7 @@ from types import SimpleNamespace
 from repro.core.arbiter import SlotArbiter
 from repro.core.policies import SchedCoop, SchedFair, SchedRR
 from repro.core.policies.base import StopReason
-from repro.core.task import Job, Task
+from repro.core.task import Job, Task, TaskState
 from repro.core.topology import Topology
 
 MIN_SAMPLE_S = 0.5  # keep timing chunks above this to dampen jitter
@@ -162,6 +162,51 @@ def bench_arbiter_cycle(*, n_ready: int, n_slots: int,
     groups = front.groups()
     assert len(groups) == 3 and front.multi, "two-level path not exercised"
     return {"ops_per_sec": ops, "iterations": iters,
+            "n_ready": n_ready, "n_slots": n_slots}
+
+
+def bench_migration_churn(*, n_ready: int, n_slots: int,
+                          iters_hint: int, repeat: int = 1) -> dict:
+    """Live-migration throughput: one op = a full any↔any re-home of a
+    busy job — promote (default→dedicated), live policy swap
+    (dedicated→dedicated), demote (dedicated→default) in rotation — each
+    withdrawing the job's entire READY pool from the old policy
+    (``Policy.remove``) and re-queueing it exactly once in the new one.
+    This is the path the serving engine's rescale-driven policy changes
+    ride; cost scales with the migrated pool, so ``tasks_migrated_per_sec``
+    is the size-normalized number."""
+    topo = Topology(n_slots, 2 if n_slots % 2 == 0 else 1)
+    front = SlotArbiter(SchedCoop(quantum=0.02))
+    front.attach(SimpleNamespace(topology=topo))
+    bg = Job("bench-bg")  # keeps the arbiter in multi-group mode throughout
+    front.attach_job(bg, policy=SchedCoop(quantum=0.02), share=1.0)
+    mover = Job("bench-mover")
+    tasks = [Task(mover, name=f"m{i}") for i in range(n_ready)]
+    for i, t in enumerate(tasks):
+        t.last_slot = None if i % 7 == 0 else i % n_slots
+        # the bare-arbiter harness stands in for the Scheduler, which
+        # marks tasks READY before queueing them — withdraw selects on it
+        t.state = TaskState.READY
+    for t in tasks:
+        front.on_ready(t)  # implicit registration into the default group
+
+    def cycle(i: int) -> None:
+        k = i % 3
+        if k == 0:    # promote out of the default group
+            front.attach_job(mover, policy=SchedFair(slice_s=0.003),
+                             share=1.0)
+        elif k == 1:  # live policy swap between dedicated groups
+            front.attach_job(mover, policy=SchedCoop(quantum=0.02),
+                             share=1.0)
+        else:         # demote back into the default group
+            front.demote_job(mover)
+
+    ops, iters = _ops_per_sec(cycle, iters_hint, repeat=repeat)
+    # leave the mover wherever the last op put it; pool must be intact
+    pol = front.policy_of(mover)
+    assert pol.ready_count_of(mover) == n_ready, "tasks lost in migration"
+    return {"ops_per_sec": ops, "iterations": iters,
+            "tasks_migrated_per_sec": ops * n_ready,
             "n_ready": n_ready, "n_slots": n_slots}
 
 
@@ -377,6 +422,13 @@ def main(argv=None) -> int:
     results["policy.arbiter2.pick_cycle"] = r
     print(f"policy.arbiter2.pick_cycle: {r['ops_per_sec']:,.0f} ops/s "
           f"(ready={r['n_ready']}, coop+fair two-level)")
+    r = bench_migration_churn(n_ready=n_ready, n_slots=args.slots,
+                              iters_hint=max(3, iters_hint // 10),
+                              repeat=repeat)
+    results["sched.migration_churn"] = r
+    print(f"sched.migration_churn: {r['ops_per_sec']:,.0f} re-homes/s "
+          f"({r['tasks_migrated_per_sec']:,.0f} task-migrations/s at "
+          f"pool {r['n_ready']})")
     r = bench_tick_driver(n_timers=500 if args.smoke else 5000,
                           repeat=1 if args.smoke else 3)
     results["sched.tick_driver"] = r

@@ -25,6 +25,18 @@ policy group*:
   detached job's blocked tasks may later re-register transparently through
   the default group.
 
+Live migration is **any↔any**: every edge of the 3x3 matrix of
+(source, destination) group kinds — default / dedicated-cooperative /
+dedicated-preemptive — re-homes a *busy* job without draining it.
+``attach_job`` promotes out of the default group or, on an
+already-dedicated job, performs a live policy swap; ``demote_job``
+re-homes a dedicated job back into the default group. In every case the
+job's READY tasks are withdrawn from the old policy (``Policy.remove``)
+and re-queued exactly once in the new one, while RUNNING tasks keep
+their slots, start a fresh slice, and route their next scheduling point
+to the new policy. ``detach_job`` remains quiescence-checked: it is
+teardown, not migration.
+
 Invariant I5 (grant rule): *a job is never granted a slot beyond its
 current lease while a sibling group has ready tasks and spare lease*. The
 arbiter enforces it structurally — borrowing grants are only reached after
@@ -209,41 +221,102 @@ class SlotArbiter:
         With ``policy=None`` the job joins the shared default group (the
         flat pre-arbiter behaviour). With a dedicated policy the job forms
         its own group — this is how one SCHED_COOP job co-locates with a
-        SCHED_FAIR sibling. A job already running through the default group
-        is *re-homed live*: its READY tasks are withdrawn from the default
+        SCHED_FAIR sibling. A job already attached is *re-homed live*:
+        out of the default group (promotion) or out of its current
+        dedicated group (a **live policy swap** — the old group is torn
+        down and the job's work moves to the fresh policy instance
+        without quiescence). READY tasks are withdrawn from the old
         policy (``Policy.remove``) and re-queued — exactly once each — in
-        the new group's policy; RUNNING tasks keep their slots and route
-        their next scheduling point to the new policy; BLOCKED tasks route
-        there on wakeup. No dispatch is lost or duplicated: a task is
-        either withdrawn before it could be picked or it was already
-        dispatched, never both.
+        the new group's policy; RUNNING tasks keep their slots, start a
+        fresh slice, and route their next scheduling point to the new
+        policy; BLOCKED tasks route there on wakeup. No dispatch is lost
+        or duplicated: a task is either withdrawn before it could be
+        picked or it was already dispatched, never both.
         """
         existing = self._leases.get(job.jid)
-        if existing is not None and (policy is None or existing.group.dedicated):
-            raise ArbiterError(f"{job} already attached")
+        if existing is not None and policy is None:
+            raise ArbiterError(
+                f"{job} already attached; use lease.resize to change its "
+                "share, attach_job(policy=...) to swap its policy live, or "
+                "demote_job to re-home it into the default group"
+            )
         if policy is not None and (policy is self._default or any(
             policy is g.policy for g in self._groups
         )):
             raise ArbiterError(
                 "dedicated policy instance is already in use by another "
-                "group; pass a fresh instance per job"
+                "group (or is the job's current policy); pass a fresh "
+                "instance per attach"
             )
         share_val = _job_share(job, share)  # validate BEFORE any teardown:
         # a failed attach must leave the job's queue/lease state untouched
-        migrated: list[Task] = []
-        if existing is not None:
-            # promote out of the default group, migrating queued work live
-            migrated = self._withdraw_ready(job, existing.group.policy)
-            self._release_lease(job)
         if policy is not None:
+            # user-supplied policy hooks may raise (custom policies):
+            # run them BEFORE the withdrawal too, or the migrated tasks
+            # would be left queued nowhere
             if self.sched is not None:
                 policy.attach(self.sched)
             policy.on_job(job)
-            group = ArbiterGroup(policy, dedicated=True)
-            self._groups.append(group)
+
+            def make_group() -> ArbiterGroup:
+                group = ArbiterGroup(policy, dedicated=True)
+                self._groups.append(group)
+                return group
         else:
-            group = self._default_group
             self._default.on_job(job)
+
+            def make_group() -> ArbiterGroup:
+                return self._default_group
+        return self._rehome(job, existing, make_group, share_val)
+
+    def demote_job(self, job: Job, *, share: Optional[float] = None
+                   ) -> SlotLease:
+        """Live dedicated→default re-homing (the reverse of promotion).
+
+        The job's dedicated lease and policy group are released and its
+        work moves into the shared default group *without quiescence*:
+        READY tasks are withdrawn from the dedicated policy and re-queued
+        exactly once in the default policy; RUNNING tasks keep their
+        slots, start a fresh slice, and route their next scheduling point
+        to the default policy. The returned lease is the job's new
+        default-group membership (``share`` defaults to the job's
+        explicit share or its nice-derived weight, like any implicit
+        registration). Use ``detach_job`` — quiescence-checked — for true
+        teardown.
+        """
+        existing = self._leases.get(job.jid)
+        if existing is None:
+            raise ArbiterError(f"{job} is not attached")
+        if not existing.group.dedicated:
+            raise ArbiterError(
+                f"{job} already runs in the default group; demote_job only "
+                "re-homes dedicated jobs"
+            )
+        share_val = _job_share(job, share)
+        # refuse an unwithdrawable source BEFORE registering the job with
+        # the default policy: a failed demote must not leave a phantom
+        # job entry in its rotation (attach_job needs no such pre-check —
+        # its failed fresh policy instance is simply discarded)
+        self._check_withdrawable(job, existing.group.policy)
+        self._default.on_job(job)  # before withdrawal: must not raise later
+
+        def make_group() -> ArbiterGroup:
+            return self._default_group
+
+        return self._rehome(job, existing, make_group, share_val)
+
+    def _rehome(self, job: Job, existing: Optional[SlotLease],
+                make_group, share_val: float) -> SlotLease:
+        """Shared migration tail of attach_job/demote_job: withdraw the
+        job's queued work from its old group (if any), bind it to the
+        group built by ``make_group``, re-queue the withdrawn READY tasks
+        exactly once, and hand the new policy the job's RUNNING tasks as
+        running-since-now."""
+        migrated: list[Task] = []
+        if existing is not None:
+            migrated = self._withdraw_ready(job, existing.group.policy)
+            self._release_lease(job)
+        group = make_group()
         group.jids.add(job.jid)
         lease = SlotLease(job, self, group, share_val)
         self._leases[job.jid] = lease
@@ -257,27 +330,52 @@ class SlotArbiter:
             # policy as running-since-now (a fresh slice), or a preemptive
             # policy could never slice-expire them
             if t.state is TaskState.RUNNING and t.slot is not None:
+                self._restart_slice(t, now)
                 group.policy.on_run(t, t.slot, now)
         self._rebalance()
         return lease
 
+    def _restart_slice(self, task: Task, now: float) -> None:
+        """Charge a re-homed RUNNING task's accrued run time and restart
+        its slot's slice clock: the new policy's first ``on_stop`` must
+        see only post-migration elapsed time (on_run promised it a fresh
+        slice), and the old policy — possibly already torn down — keeps
+        the pre-migration accrual out of the new one's accounting."""
+        slots = getattr(self.sched, "_slots", None)
+        if slots is None:  # bare stand-in scheduler (benchmarks/tests)
+            return
+        st = slots[task.slot]
+        elapsed = now - st.run_started
+        if elapsed > 0.0:
+            task.stats.run_time += elapsed
+            task.job.service_time += elapsed
+            st.run_started = now
+
     def _withdraw_ready(self, job: Job, policy: Policy) -> list[Task]:
-        """Surrender ``job``'s queued tasks from ``policy`` (live migration).
+        """Surrender ``job``'s queued tasks from ``policy`` (live migration:
+        promotion, policy swap, and demotion all start here).
         Every READY task of an attached job is queued in its group's policy,
         so the withdrawal is total: afterwards the policy holds none of the
         job's work and its incremental accounting matches a never-admitted
         pool."""
+        ready = self._check_withdrawable(job, policy)
+        for t in ready:
+            policy.remove(t)
+        return ready
+
+    def _check_withdrawable(self, job: Job, policy: Policy) -> list[Task]:
+        """Mutation-free precondition of a live withdrawal: returns the
+        job's READY tasks, raising if ``policy`` cannot surrender them —
+        checked BEFORE touching any queue (or registering the job
+        elsewhere), so a refused migration leaves every policy's state
+        untouched."""
         ready = [t for t in job.tasks if t.state is TaskState.READY]
         if ready and type(policy).remove is Policy.remove:
-            # checked BEFORE touching the queue: a partial withdrawal from
-            # a legacy policy (no remove()) must not corrupt its state
             raise ArbiterError(
                 f"{policy.name} does not implement Policy.remove: cannot "
                 f"live-migrate {job}'s queued tasks; attach before "
                 "submitting work or implement remove()"
             )
-        for t in ready:
-            policy.remove(t)
         return ready
 
     def detach_job(self, job: Job) -> None:
@@ -305,18 +403,30 @@ class SlotArbiter:
         return group
 
     def _require_quiescent(self, job: Job, what: str) -> None:
-        for t in job.tasks:
-            if t.state in (TaskState.READY, TaskState.RUNNING):
-                raise ArbiterError(
-                    f"cannot {what}: {job} still has {t.state.value} task {t}"
-                )
+        busy = [t for t in job.tasks
+                if t.state in (TaskState.READY, TaskState.RUNNING)]
+        if busy:
+            shown = ", ".join(
+                f"{t.name}#{t.tid}={t.state.value}" for t in busy[:8])
+            more = f", +{len(busy) - 8} more" if len(busy) > 8 else ""
+            raise ArbiterError(
+                f"cannot {what}: {job.name}#{job.jid} still has {len(busy)} "
+                f"READY/RUNNING task(s): {shown}{more} — detach is teardown "
+                "only; attach_job(policy=...)/demote_job re-home a busy job "
+                "live"
+            )
 
     # ------------------------------------------------------------------ #
     # lease bookkeeping
     # ------------------------------------------------------------------ #
     def _resize(self, lease: SlotLease, share: float) -> None:
-        if lease.arbiter is not self or lease.job.jid not in self._leases:
-            raise ArbiterError(f"{lease} is no longer attached")
+        # identity, not jid membership: a live swap/demote supersedes the
+        # job's lease object, and a resize of the dead one must fail loud
+        # rather than write a share no quota computation will ever read
+        if lease.arbiter is not self \
+                or self._leases.get(lease.job.jid) is not lease:
+            raise ArbiterError(f"{lease} is no longer attached "
+                               "(detached, or superseded by a re-home)")
         share = float(share)
         if share < 0:
             raise ArbiterError(f"negative share {share}")

@@ -111,7 +111,11 @@ class SimExecutor:
             dispatch=self._on_dispatch,
             ctx_switch_cost=self.costs.ctx_switch,
         )
-        self._tick_armed: set[int] = set()
+        #: slot -> deadline of its authoritative pending preemption tick;
+        #: an earlier re-arm (e.g. a live swap to a shorter-slice policy)
+        #: supersedes a pending later tick, whose token dies at fire time
+        #: — mirrors the real-thread watchdog's class-migration semantics
+        self._tick_armed: dict[int, float] = {}
         #: cache residency: which task's working set last warmed each slot
         self._slot_last: dict[int, int] = {}
 
@@ -136,15 +140,31 @@ class SimExecutor:
                share: Optional[float] = None):
         """nosv_attach: register ``job`` with an optional dedicated
         intra-job policy + slot share; returns its ``SlotLease``. A job
-        with queued/running work is re-homed live (see SlotArbiter); tasks
-        already running under a newly preemptive policy get their slots'
-        preemption ticks armed here (new dispatches arm themselves)."""
+        with queued/running work is re-homed live — promotion out of the
+        default group, or a live policy swap when already dedicated (see
+        SlotArbiter); tasks already running under a newly preemptive
+        policy get their slots' preemption ticks armed here (new
+        dispatches arm themselves)."""
         lease = self.sched.attach_job(job, policy=policy, share=share)
+        self._arm_running(job)
+        return lease
+
+    def demote(self, job: Job, *, share: Optional[float] = None):
+        """Reverse nosv_attach edge: live re-home a dedicated ``job`` into
+        the shared default group (dedicated lease/policy released, tasks
+        keep running); returns the new default-group lease."""
+        lease = self.sched.demote_job(job, share=share)
+        self._arm_running(job)
+        return lease
+
+    def _arm_running(self, job: Job) -> None:
+        """Arm preemption ticks for a re-homed job's RUNNING tasks when
+        its (new) policy is preemptive — they were dispatched before the
+        policy change, so dispatch-time arming never saw them."""
         pol = self.sched.policy_of(job)
         if pol.preemptive and pol.tick_interval is not None:
             for slot_id in self.sched.slots_running(job):
                 self._arm_tick(slot_id, self.sched.running_on(slot_id))
-        return lease
 
     def detach(self, job: Job) -> None:
         """nosv_detach: unregister a quiescent job, releasing its lease."""
@@ -323,6 +343,19 @@ class SimExecutor:
             self._bump(task)
             self.sched.yield_(task)
             return False
+
+        if kind == "checkpoint":
+            # explicit preemption point (the sim analogue of
+            # usf.checkpoint): a pending request_preempt flag — e.g. from
+            # an external preemption request against this slot — is
+            # consumed here; unflagged it is a no-op and the generator
+            # keeps advancing. The sim is single-threaded, so the flag
+            # cannot vanish between the peek and the consume.
+            if self.sched.preempt_requested(task):
+                self._bump(task)
+                self.sched.consume_preempt(task)
+                return False
+            return True
 
         if kind == "stall":
             # holds the slot, not useful, not a scheduling point (§5.6)
@@ -514,10 +547,10 @@ class SimExecutor:
     # -- preemption ticks -------------------------------------------------- #
     def _arm_tick(self, slot_id: int, task: Optional[Task] = None) -> None:
         """Arm a preemption tick for the task (about to be) running on the
-        slot. Per-job policies make this per-task: a SCHED_COOP job's tasks
-        never arm ticks even when a co-located job is preemptive."""
-        if slot_id in self._tick_armed:
-            return
+        slot, unless an equal-or-earlier one is pending. Per-job policies
+        make this per-task: a SCHED_COOP job's tasks never arm ticks even
+        when a co-located job is preemptive. An earlier request (a swap
+        to a shorter-slice policy) supersedes a pending later tick."""
         if task is None:
             task = self.sched.running_on(slot_id)
             if task is None:
@@ -525,11 +558,17 @@ class SimExecutor:
         pol = self.sched.policy_of(task.job)
         if not pol.preemptive or pol.tick_interval is None:
             return
-        self._tick_armed.add(slot_id)
-        self._post_ev(self._now + pol.tick_interval, _EV_TICK, slot_id)
+        deadline = self._now + pol.tick_interval
+        cur = self._tick_armed.get(slot_id)
+        if cur is not None and cur <= deadline:
+            return
+        self._tick_armed[slot_id] = deadline
+        self._post_ev(deadline, _EV_TICK, slot_id)
 
     def _tick(self, slot_id: int) -> None:
-        self._tick_armed.discard(slot_id)
+        if self._tick_armed.get(slot_id) != self._now:
+            return  # superseded by an earlier re-arm: dead token
+        del self._tick_armed[slot_id]
         running = self.sched.running_on(slot_id)
         if running is None:
             return  # re-armed on next dispatch

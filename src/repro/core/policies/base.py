@@ -43,8 +43,13 @@ class Policy:
         """A job (process) registered with the scheduler."""
 
     def on_job_detach(self, job: "Job") -> None:
-        """A job unregistered (arbiter detach). The job is quiescent: no
-        READY/RUNNING tasks remain, so per-job queues are empty."""
+        """A job left this policy (arbiter detach, or a live re-home out
+        of the *default* group — dedicated groups are dropped wholesale
+        on swap/demote instead). The job's per-job queues are empty
+        either way: a quiescent detach has no READY tasks by contract,
+        and a live re-home withdraws them via ``remove`` first — but the
+        job MAY still have RUNNING tasks on the live path, so only queue
+        and per-task bookkeeping may be dropped here, never slot state."""
 
     # -- scheduling points ---------------------------------------------- #
     def on_ready(self, task: "Task") -> None:
@@ -71,7 +76,11 @@ class Policy:
         The inverse of ``on_ready``: after ``remove`` the task is no longer
         pickable here and all incremental pool accounting must be as if it
         had never been admitted. The arbiter uses this to surrender one
-        job's queued tasks when the job re-homes to another policy group.
+        job's queued tasks when the job re-homes to another policy group —
+        every edge of the any↔any migration matrix (promotion, live policy
+        swap, demotion) funnels through it, so it must stay correct under
+        arbitrary withdraw-all/re-admit churn (locksteped against RefFair
+        in tests/test_sched_fastpath.py).
         Raises ``KeyError`` if the task is not queued here.
         """
         raise NotImplementedError

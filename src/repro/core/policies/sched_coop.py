@@ -112,9 +112,14 @@ class SchedCoop(Policy):
         jq = self._jobs.pop(job.jid, None)
         if jq is None:
             return
-        if jq.size:  # arbiter guarantees quiescence; guard anyway
+        if jq.size:  # arbiter withdraws queued work first; guard anyway
             self._jobs[job.jid] = jq
-            raise ValueError(f"detach of {job} with {jq.size} queued tasks")
+            left = [t.name for q in jq.per_slot.values() for t in q]
+            left += [t.name for t in jq.unaffine]
+            raise ValueError(
+                f"detach of {job} with {jq.size} queued task(s) still in "
+                f"this policy: {', '.join(left[:8])}"
+            )
         self._jid_list.remove(job.jid)
         self._jid_pos = {jid: i for i, jid in enumerate(self._jid_list)}
         if self._current_jid == job.jid:

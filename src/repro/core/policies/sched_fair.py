@@ -193,7 +193,11 @@ class SchedFair(Policy):
         self._wvsum = wvsum
 
     def on_job_detach(self, job) -> None:
-        # quiescent by contract: just drop the per-task accounting entries
+        # No READY tasks remain by contract (quiescent detach, or a live
+        # re-home that already withdrew them via remove()), so dropping
+        # the per-task accounting cannot orphan a queued entry. Without
+        # this the default group would leak vruntime entries for every
+        # job that ever promoted out of it (swap-churn workloads).
         for t in job.tasks:
             self._vruntime.pop(t.tid, None)
             self._run_started.pop(t.tid, None)

@@ -28,6 +28,14 @@ class SchedRR(Policy):
         self._run_started: dict[int, float] = {}
         self._per_job: dict[int, int] = {}
 
+    def on_job_detach(self, job) -> None:
+        # queues hold none of the job's tasks by contract (quiescent, or
+        # withdrawn via remove() on a live re-home); drop the slice-start
+        # stamps so a default-group SchedRR does not leak them across
+        # swap churn
+        for t in job.tasks:
+            self._run_started.pop(t.tid, None)
+
     def on_ready(self, task: Task) -> None:
         self._q.append(task)
         jid = task.job.jid

@@ -123,6 +123,18 @@ class Scheduler:
             self._fill_idle_slots(self.clock())
             return lease
 
+    def demote_job(self, job: Job, *, share: Optional[float] = None
+                   ) -> SlotLease:
+        """Live dedicated→default re-homing: release the job's dedicated
+        lease/policy group and move its work — READY tasks re-queued
+        exactly once, RUNNING tasks keeping their slots — into the shared
+        default group. No quiescence required (the any↔any migration
+        matrix; ``detach_job`` remains the teardown path)."""
+        with self._lock:
+            lease = self.arbiter.demote_job(job, share=share)
+            self._fill_idle_slots(self.clock())
+            return lease
+
     def detach_job(self, job: Job) -> None:
         """nosv_detach analogue: unregister a quiescent job, freeing its
         lease for the siblings (raises if it still has READY/RUNNING work).
@@ -246,19 +258,33 @@ class Scheduler:
     # deferred preemption (real-thread tick driver)
     # ------------------------------------------------------------------ #
     def tick_request(self, slot_id: int) -> bool:
-        """``tick`` + ``request_preempt`` under ONE lock acquisition: the
-        watchdog uses this so the need-resched flag can only land on the
-        task the verdict was about — with two separate calls the slot
-        could swap in between and a SCHED_COOP task could get flagged."""
+        """``tick`` + ``request_preempt`` under ONE lock acquisition, so
+        the need-resched flag can only land on the task the verdict was
+        about — with two separate calls the slot could swap in between
+        and a SCHED_COOP task could get flagged. Kept for external tick
+        drivers; the watchdog itself uses ``tick_and_rearm`` (same
+        verdict logic, not a duplicate — this delegates)."""
+        return self.tick_and_rearm(slot_id)[0]
+
+    def tick_and_rearm(self, slot_id: int) -> tuple[bool, Optional[float]]:
+        """``tick_request`` plus the watchdog's re-arm decision under ONE
+        lock acquisition: returns (flagged, tick_interval) where
+        ``tick_interval`` is the running task's policy period when that
+        policy is preemptive, else None. The coalesced fire loop calls
+        this once per member slot instead of three lock round-trips
+        (verdict, running_on, policy_of) — and the re-arm verdict is
+        guaranteed to be about the same task the tick verdict was."""
         with self._lock:
             st = self._slots[slot_id]
             task = st.running
             if task is None:
-                return False
-            if not self.arbiter.should_preempt(task, slot_id, self.clock()):
-                return False
-            st.need_resched = True
-            return True
+                return False, None
+            flagged = False
+            if self.arbiter.should_preempt(task, slot_id, self.clock()):
+                st.need_resched = True
+                flagged = True
+            pol = self.arbiter.policy_of(task.job)
+            return flagged, (pol.tick_interval if pol.preemptive else None)
 
     def request_preempt(self, slot_id: int) -> bool:
         """Mark the slot need-resched (asynchronous preemption request).

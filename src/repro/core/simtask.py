@@ -77,6 +77,13 @@ def yield_() -> tuple:
     return ("yield",)
 
 
+def checkpoint() -> tuple:
+    """Explicit preemption point (usf.checkpoint analogue): consumes a
+    pending external preemption request against the task's slot, else a
+    no-op that keeps the generator advancing synchronously."""
+    return ("checkpoint",)
+
+
 def spawn(task: Task) -> tuple:
     return ("spawn", task)
 

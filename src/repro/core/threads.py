@@ -59,7 +59,8 @@ class UsfTaskError(UsfError):
 
 
 _WD_CALL = 0  # payload = _TimerHandle (timed wakeup / timeout callback)
-_WD_TICK = 1  # payload = slot_id (preemption tick)
+_WD_TICK = 1  # payload = tick interval (one coalesced entry per interval
+#               class; the member slots are looked up at pop time)
 
 
 class _TimerHandle:
@@ -85,14 +86,22 @@ class _Watchdog:
 
     Two entry kinds share the heap:
 
-    * **preemption ticks** (per slot, armed only while the slot runs a task
-      whose *own* intra-job policy is preemptive — SCHED_COOP slots are
-      never ticked, keeping I2 per job): on expiry the scheduler is asked
-      ``tick(slot)``; a True answer (slice expiry, or the lease-revocation
-      condition for an over-lease borrower) becomes ``request_preempt``,
-      which the running task consumes at its next scheduling point or
-      explicit ``usf.checkpoint()``. This is what makes preemptive policies
-      and mid-run ``lease.resize()`` reclaim land under real threads.
+    * **preemption ticks**, coalesced by *interval class*: every slot
+      running a preemptive-policy task joins the class of its policy's
+      tick period, and all slots of a class ride ONE periodic heap entry
+      — the heap holds O(distinct intervals) tick entries, not O(slots),
+      so hundreds of slots at a couple of slice lengths cost two entries
+      per period instead of hundreds. A slot is armed only while it runs
+      a task whose *own* intra-job policy is preemptive (SCHED_COOP slots
+      are never ticked, keeping I2 per job); a policy swap moves the slot
+      between classes (an earlier class deadline still supersedes a
+      longer pending one). On expiry the scheduler is asked ``tick(slot)``
+      for each member slot; a True answer (slice expiry, or the
+      lease-revocation condition for an over-lease borrower) becomes
+      ``request_preempt``, which the running task consumes at its next
+      scheduling point or explicit ``usf.checkpoint()``. This is what
+      makes preemptive policies and mid-run ``lease.resize()`` reclaim
+      land under real threads.
     * **timed wakeups** (``call_at``/``call_later``): ``sleep()``, timed
       ``join()`` and timed waits route here instead of spawning one
       ``threading.Timer`` thread per call.
@@ -106,11 +115,16 @@ class _Watchdog:
         self._cv = threading.Condition(threading.Lock())
         self._heap: list[tuple] = []  # (deadline, seq, kind, payload)
         self._seq = 0
-        #: slot -> deadline of its authoritative pending tick; heap entries
-        #: whose deadline no longer matches are superseded tokens (a task
-        #: handoff to a shorter-slice policy re-arms EARLIER, it must not
-        #: wait out the previous policy's longer interval)
-        self._tick_next: dict[int, float] = {}
+        # -- interval-class coalescing state (all under self._cv) -------- #
+        #: interval -> member slots riding that class's periodic entry
+        self._classes: dict[float, set[int]] = {}
+        #: interval -> deadline of the class's single pending heap entry;
+        #: absent = no entry pending (pushed again when a slot joins or
+        #: the class re-arms after a fire)
+        self._class_deadline: dict[float, float] = {}
+        #: slot -> the interval class it currently rides (at most one:
+        #: re-arming with a different period migrates the slot)
+        self._slot_interval: dict[int, float] = {}
         self._thread: Optional[threading.Thread] = None
         self._stop = False
         self._cancelled = 0  # dead call entries since the last compaction
@@ -149,16 +163,56 @@ class _Watchdog:
         return self.call_at(time.monotonic() + delay, fn)
 
     def arm_tick(self, slot_id: int, interval: float) -> None:
-        """Arm a preemption tick for the slot unless an equal-or-earlier
-        one is already pending; an earlier request supersedes a later
-        pending tick (its heap token goes stale and is dropped on pop)."""
-        deadline = time.monotonic() + interval
+        """Join the slot to the tick class of ``interval``.
+
+        Slots sharing a tick period ride one periodic heap entry, so
+        re-arming an already-member slot is a dict lookup, not a heap
+        push. A slot armed with a *different* period (a policy handoff)
+        migrates between classes only when the new class would service it
+        EARLIER — an arm never lengthens a pending service, so a racing
+        stale re-arm (e.g. the fire loop's, whose interval was computed
+        just before a live swap armed the shorter class) cannot clobber
+        the earlier tick. A slot left in a shorter class by a swap to a
+        longer period settles into the right class at that shorter
+        class's next fire (the fire-loop re-arm sees no current class
+        then)."""
         with self._cv:
-            cur = self._tick_next.get(slot_id)
-            if cur is not None and cur <= deadline:
+            if self._stop:
                 return
-            self._tick_next[slot_id] = deadline
-            self._push(deadline, _WD_TICK, slot_id)
+            cur = self._slot_interval.get(slot_id)
+            if cur == interval:
+                return  # already riding this class's periodic entry
+            if cur is not None:
+                now = time.monotonic()
+                cur_dl = self._class_deadline.get(cur, now + cur)
+                new_dl = self._class_deadline.get(interval, now + interval)
+                if cur_dl <= new_dl:
+                    return  # pending service is already no later: keep it
+                self._classes[cur].discard(slot_id)
+            self._slot_interval[slot_id] = interval
+            members = self._classes.get(interval)
+            if members is None:
+                members = self._classes[interval] = set()
+            members.add(slot_id)
+            if interval not in self._class_deadline:
+                deadline = time.monotonic() + interval
+                self._class_deadline[interval] = deadline
+                self._push(deadline, _WD_TICK, interval)
+
+    def tick_heap_stats(self) -> dict:
+        """Introspection (tests/benchmarks): the coalescing contract is
+        ``tick_entries <= interval_classes`` — never O(slots_armed)."""
+        with self._cv:
+            return {
+                "tick_entries": sum(1 for e in self._heap
+                                    if e[2] == _WD_TICK),
+                "interval_classes": len(self._class_deadline),
+                "slots_armed": len(self._slot_interval),
+                "timed_wakeups": sum(1 for e in self._heap
+                                     if e[2] == _WD_CALL
+                                     and e[3].fn is not None),
+                "heap_len": len(self._heap),
+            }
 
     def _push(self, deadline: float, kind: int, payload) -> None:
         # caller holds self._cv
@@ -193,10 +247,19 @@ class _Watchdog:
                     return
                 entry = heapq.heappop(heap)
                 if entry[2] == _WD_TICK:
-                    sid = entry[3]
-                    if self._tick_next.get(sid) != entry[0]:
-                        continue  # superseded by an earlier re-arm
-                    del self._tick_next[sid]
+                    interval = entry[3]
+                    if self._class_deadline.get(interval) != entry[0]:
+                        continue  # stale token (class was torn down)
+                    del self._class_deadline[interval]
+                    # detach the whole class under the lock: member slots
+                    # re-join via arm_tick (from _fire's re-arm loop or a
+                    # concurrent dispatch) which re-pushes ONE fresh entry
+                    slots = self._classes.pop(interval, set())
+                    for sid in slots:
+                        if self._slot_interval.get(sid) == interval:
+                            del self._slot_interval[sid]
+                    entry = (entry[0], entry[1], _WD_TICK,
+                             (interval, slots))
             try:
                 self._fire(entry)  # outside the watchdog lock
             except Exception:  # one bad callback must not kill the driver:
@@ -214,18 +277,35 @@ class _Watchdog:
             if fn is not None:
                 fn()
             return
-        slot_id = entry[3]
+        interval_cls, slots = entry[3]
         sched = self._rt.sched
-        self.ticks_fired += 1
-        if sched.tick_request(slot_id):  # verdict + flag under one lock
-            self.preempts_requested += 1
-        # re-arm while the slot still runs a preemptive-policy task (the
-        # flagged task keeps its slot until it reaches a preemption point)
-        task = sched.running_on(slot_id)
-        if task is not None:
-            pol = sched.policy_of(task.job)
-            if pol.preemptive and pol.tick_interval:
-                self.arm_tick(slot_id, pol.tick_interval)
+        for slot_id in slots:
+            self.ticks_fired += 1
+            try:
+                # verdict + flag + re-arm decision under ONE scheduler lock
+                flagged, interval = sched.tick_and_rearm(slot_id)
+            except Exception:
+                # a raising custom should_preempt must only cost ITS slot
+                # one tick, not disarm every sibling slot of the class —
+                # the whole class was detached at pop time. Re-arm the
+                # failing slot at its old class period so a transient
+                # error does not silence its ticks until the next dispatch
+                import sys
+                import traceback
+
+                print(f"usf-watchdog: tick for slot {slot_id} raised:\n"
+                      + traceback.format_exc(), file=sys.stderr)
+                self.arm_tick(slot_id, interval_cls)
+                continue
+            if flagged:
+                self.preempts_requested += 1
+            # re-join a class while the slot still runs a preemptive-policy
+            # task (the flagged task keeps its slot until it reaches a
+            # preemption point); after a policy swap this may be a
+            # *different* class than the one that just fired. Idle slots
+            # simply drop out — the next dispatch re-arms them.
+            if interval:
+                self.arm_tick(slot_id, interval)
 
     def stop(self, timeout: float = 5.0) -> None:
         with self._cv:
@@ -234,7 +314,9 @@ class _Watchdog:
             # sleeper/timeout waiter must never be left parked forever
             pending = [e for e in self._heap if e[2] == _WD_CALL]
             self._heap.clear()
-            self._tick_next.clear()
+            self._classes.clear()
+            self._class_deadline.clear()
+            self._slot_interval.clear()
             self._cv.notify_all()
         t = self._thread
         if t is not None:
@@ -385,7 +467,8 @@ class UsfRuntime:
         """Register ``job`` with an optional dedicated intra-job policy and
         slot share; returns its ``SlotLease``.
 
-        A job already running through the default group is re-homed LIVE:
+        A job already attached is re-homed LIVE — promoted out of the
+        default group, or policy-swapped in place when already dedicated:
         queued tasks migrate to the new policy, running tasks keep their
         slots and route later scheduling points there. Preemptive policies
         get watchdog ticks: slice expiry and lease reclaim land within one
@@ -393,14 +476,27 @@ class UsfRuntime:
         (SCHED_COOP jobs are never ticked — reclaim from them waits for
         their next blocking point, I2)."""
         lease = self.sched.attach_job(job, policy=policy, share=share)
+        self._arm_running(job)
+        return lease
+
+    def demote(self, job: Job, *, share: Optional[float] = None):
+        """Live dedicated→default re-homing (the reverse attach edge):
+        the job's dedicated lease/policy group is released and its work —
+        queued and running — moves into the shared default group without
+        quiescence; returns the new default-group lease."""
+        lease = self.sched.demote_job(job, share=share)
+        self._arm_running(job)
+        return lease
+
+    def _arm_running(self, job: Job) -> None:
+        """Arm ticks for a re-homed job's RUNNING tasks when its (new)
+        policy is preemptive: they were dispatched before the policy
+        change, so dispatch-time arming never saw them."""
         pol = self.sched.policy_of(job)
         if pol.preemptive and pol.tick_interval:
             self._ticks_enabled = True
-            # re-homed RUNNING tasks were dispatched before the policy
-            # switch: arm their slots now (new dispatches arm themselves)
             for slot_id in self.sched.slots_running(job):
                 self.watchdog.arm_tick(slot_id, pol.tick_interval)
-        return lease
 
     def detach(self, job: Job) -> None:
         """Unregister a quiescent job, releasing its lease to the siblings."""

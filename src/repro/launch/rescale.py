@@ -64,13 +64,44 @@ class ElasticCoordinator:
     scheduling layer owns slot leases. The coordinator is the seam between
     them: ``register`` the leases of jobs whose slot share should track
     their device share, then call ``on_rescale`` whenever the mesh changes.
+
+    ``runtime`` (a ``SimExecutor`` or ``UsfRuntime`` — anything exposing
+    ``demote(job)``) enables ``demote_on_collapse`` registrations: a job
+    whose mesh shrinks to zero devices is *live-demoted* into the shared
+    default group instead of being left holding a dedicated zero-share
+    lease — the rescale-driven policy swap without drain. The demoted
+    job leaves elastic tracking (its dedicated lease is gone); re-promote
+    it with a fresh ``attach`` + ``register`` once its mesh regrows.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, runtime=None) -> None:
+        self._runtime = runtime
         self._leases: list["SlotLease"] = []
+        #: opt-in keyed by LEASE identity, not jid: a stale registration's
+        #: flag must die with it, never eclipsing (or erasing) the flag of
+        #: a newer live registration for the same job
+        self._demote_on_collapse: set["SlotLease"] = set()
 
-    def register(self, lease: "SlotLease") -> "SlotLease":
-        self._leases.append(lease)
+    def register(self, lease: "SlotLease", *,
+                 demote_on_collapse: bool = False) -> "SlotLease":
+        if demote_on_collapse and self._runtime is None:
+            raise ValueError(
+                "demote_on_collapse needs a runtime exposing demote(job); "
+                "pass it to ElasticCoordinator(runtime=...)"
+            )
+        if demote_on_collapse and not lease.group.dedicated:
+            raise ValueError(
+                f"demote_on_collapse needs a dedicated lease; {lease.job} "
+                "already runs in the default group (nothing to demote)"
+            )
+        if lease not in self._leases:  # re-register only updates the flag:
+            self._leases.append(lease)  # a duplicate would resize twice
+        if demote_on_collapse:
+            self._demote_on_collapse.add(lease)
+        else:
+            # re-registering the same lease without the flag revokes its
+            # opt-in; a FRESH lease simply never carries the old one's
+            self._demote_on_collapse.discard(lease)
         return lease
 
     def leases(self) -> Iterable["SlotLease"]:
@@ -78,5 +109,26 @@ class ElasticCoordinator:
 
     def on_rescale(self, event: MeshRescaleEvent) -> dict[str, float]:
         """Apply the event to every registered lease; returns the new
-        shares keyed by job name."""
-        return {l.job.name: apply_rescale(l, event) for l in self._leases}
+        shares keyed by job name (0.0 for a job demoted on collapse —
+        its dedicated share is released wholesale)."""
+        shares: dict[str, float] = {}
+        survivors: list["SlotLease"] = []
+        for lease in self._leases:
+            if lease.job.lease is not lease:
+                # superseded out-of-band (a live swap/demote/detach the
+                # coordinator did not perform): the registration is dead —
+                # drop it (and only ITS flag) rather than resize a lease
+                # no quota reads; the job's new lease needs a fresh
+                # register()
+                self._demote_on_collapse.discard(lease)
+                continue
+            if (event.new_devices == 0
+                    and lease in self._demote_on_collapse):
+                self._runtime.demote(lease.job)
+                self._demote_on_collapse.discard(lease)
+                shares[lease.job.name] = 0.0
+                continue  # the dedicated lease is dead: stop tracking it
+            shares[lease.job.name] = apply_rescale(lease, event)
+            survivors.append(lease)
+        self._leases = survivors
+        return shares

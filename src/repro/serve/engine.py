@@ -106,6 +106,24 @@ class InferenceServer:
                 share=self.job.share,
             )
 
+    def set_policy(self, policy: Optional[Policy], *,
+                   share: Optional[float] = None):
+        """Live re-home the server without draining its decode loop (the
+        rescale-driven policy change): a fresh dedicated intra-job policy
+        swaps in place, or ``policy=None`` demotes the server into the
+        shared default group (e.g. after its mesh collapsed and a
+        dedicated slot claim no longer makes sense). Queued requests keep
+        their place — the worker task migrates exactly once, mid-batch if
+        it is running."""
+        if policy is None:
+            self.lease = self.usf.demote(self.job, share=share)
+        else:
+            self.lease = self.usf.attach(
+                self.job, policy=policy,
+                share=share if share is not None else self.job.share,
+            )
+        return self.lease
+
     def stop(self) -> None:
         self._stop = True
         self.queue.put(None)  # wake the worker

@@ -140,15 +140,30 @@ def test_detached_jobs_blocked_task_reregisters_across_mode_switch():
     assert t_a.done
 
 
-def test_attach_rejects_duplicate_and_shared_policy_instance():
+def test_attach_rejects_shared_policy_instance_and_reattach_swaps():
     sim = make_sim()
     job_a, job_b = Job("a"), Job("b")
     pol = SchedCoop()
     sim.attach(job_a, policy=pol)
     with pytest.raises(ArbiterError):
-        sim.attach(job_a, policy=SchedCoop())  # already attached
-    with pytest.raises(ArbiterError):
         sim.attach(job_b, policy=pol)  # policy instance reuse
+    with pytest.raises(ArbiterError):
+        sim.attach(job_a, policy=pol)  # swap must pass a FRESH instance
+    with pytest.raises(ArbiterError):
+        sim.attach(job_a)  # policy=None on an attached job: use demote_job
+    # re-attach with a fresh dedicated policy is a live policy swap now
+    swap = SchedFair(slice_s=0.002)
+    lease = sim.attach(job_a, policy=swap, share=2.0)
+    assert job_a.lease is lease and lease.group.dedicated
+    assert sim.sched.policy_of(job_a) is swap
+    # demote re-homes it back into the shared default group
+    lease2 = sim.demote(job_a)
+    assert job_a.lease is lease2 and not lease2.group.dedicated
+    assert sim.sched.policy_of(job_a) is sim.sched.arbiter.default_policy
+    with pytest.raises(ArbiterError):
+        sim.demote(job_a)  # already in the default group
+    with pytest.raises(ArbiterError):
+        sim.demote(Job("never-attached"))
 
 
 def test_attach_with_busy_job_rehomes_live():

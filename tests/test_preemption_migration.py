@@ -343,6 +343,274 @@ def test_rehomed_running_task_is_slice_preempted():
     assert t2.stats.first_run_at < 0.1
 
 
+@pytest.mark.parametrize("seed", range(8))
+def test_any_to_any_migration_exactly_once_property(seed):
+    """Seeded promote → live policy swap → demote chain on a busy job:
+    every edge re-homes without losing or duplicating a dispatch, and the
+    READY pool moves wholesale at each hop."""
+    rng = random.Random(7000 + seed)
+    n_slots = rng.choice((1, 2, 4))
+    sim = SimExecutor(Topology(n_slots, 1), SchedCoop(quantum=0.01),
+                      max_time=600.0)
+    counts = _instrument_dispatches(sim)
+    mover, bg = Job(f"anymover{seed}"), Job(f"anybg{seed}")
+    tasks = [sim.spawn(mover, _prog_body(rng))
+             for _ in range(rng.randint(3, 2 * n_slots + 2))]
+    tasks += [sim.spawn(bg, _prog_body(rng))
+              for _ in range(rng.randint(1, n_slots))]
+
+    def hop(move):
+        sim.run(until=sim.now() + rng.uniform(0.001, 0.004))
+        ready_before = sum(1 for t in mover.tasks
+                           if t.state is TaskState.READY)
+        move()
+        pol = sim.sched.policy_of(mover)
+        assert pol.ready_count_of(mover) == ready_before, (
+            f"seed {seed}: READY pool not moved wholesale")
+
+    first = rng.choice((lambda: SchedFair(slice_s=0.002),
+                        lambda: SchedCoop(quantum=0.01)))()
+    second = rng.choice((lambda: SchedRR(quantum=0.002),
+                         lambda: SchedFair(slice_s=0.002),
+                         lambda: SchedCoop(quantum=0.01)))()
+    hop(lambda: sim.attach(mover, policy=first, share=1.0))      # promote
+    hop(lambda: sim.attach(mover, policy=second, share=2.0))     # swap
+    assert sim.sched.policy_of(mover) is second
+    hop(lambda: sim.demote(mover))                               # demote
+    assert not mover.lease.group.dedicated
+    sim.run()
+    assert all(t.done for t in tasks), f"seed {seed}: lost dispatches"
+    for t in tasks:
+        assert counts[t.tid] == t.stats.dispatches, (
+            f"seed {seed}: task {t.tid} saw {counts[t.tid]} executor "
+            f"dispatches vs {t.stats.dispatches} accounted")
+
+
+def test_resize_of_superseded_lease_raises():
+    """A live swap/demote supersedes the job's SlotLease object: resizing
+    the dead one must raise, not silently write a share nothing reads."""
+    from repro.core.arbiter import ArbiterError
+
+    sim = SimExecutor(Topology(2, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    job = Job("stale")
+    old_lease = sim.attach(job, policy=SchedFair(slice_s=0.002), share=1.0)
+    new_lease = sim.attach(job, policy=SchedRR(quantum=0.002), share=1.0)
+    assert new_lease is not old_lease
+    with pytest.raises(ArbiterError, match="superseded"):
+        old_lease.resize(4.0)
+    new_lease.resize(4.0)  # the live lease still resizes fine
+    assert new_lease.share == 4.0
+
+
+def test_sim_swap_to_shorter_slice_supersedes_pending_tick():
+    """Sim twin of the watchdog class-migration semantics: a pending
+    long-interval tick (old policy) must not delay slicing after a live
+    swap to a short-slice policy — the earlier re-arm wins."""
+    sim = SimExecutor(Topology(1, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    job = Job("tickswap")
+
+    def long_compute():
+        yield st.compute(0.5)
+
+    t1 = sim.spawn(job, long_compute)
+    t2 = sim.spawn(job, long_compute)
+    sim.attach(job, policy=SchedRR(quantum=10.0), share=1.0)
+    sim.run(until=0.001)  # t1 RUNNING with a tick pending at ~10s
+    assert t1.state is TaskState.RUNNING
+    sim.attach(job, policy=SchedFair(slice_s=0.002), share=1.0)  # live swap
+    sim.run(until=0.1)
+    # without supersede, the first tick under the new policy fires at 10s
+    # and t2 starves behind the old quantum
+    assert t1.stats.preemptions > 0
+    assert t2.stats.first_run_at is not None and t2.stats.first_run_at < 0.1
+    sim.run()
+    assert t1.done and t2.done
+
+
+def test_swap_to_preemptive_slices_rehomed_running_task():
+    """dedicated-coop → dedicated-fair live swap: the RUNNING migrant
+    becomes slice-preemptible under the NEW policy (ticks re-armed at the
+    swap, fresh slice started)."""
+    sim = SimExecutor(Topology(1, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    job = Job("swapmover")
+
+    def long_compute():
+        yield st.compute(0.5)
+
+    t1 = sim.spawn(job, long_compute)
+    t2 = sim.spawn(job, long_compute)
+    sim.attach(job, policy=SchedCoop(quantum=0.01), share=1.0)
+    sim.run(until=0.001)
+    assert t1.state is TaskState.RUNNING
+    sim.attach(job, policy=SchedFair(slice_s=0.002), share=1.0)  # live swap
+    sim.run()
+    assert t1.done and t2.done
+    assert t1.stats.preemptions > 0  # sliced under the swapped-in policy
+    assert t2.stats.first_run_at < 0.1
+
+
+def test_rehomed_running_task_gets_fresh_slice_accounting():
+    """Migration restarts the slot's slice clock: the pre-migration run
+    time is charged to the task at the hop, so the new policy's first
+    on_stop sees only post-migration elapsed time — and no run time is
+    lost or double-counted end to end."""
+    sim = SimExecutor(Topology(1, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    job = Job("slicemover")
+
+    def body():
+        yield st.compute(0.02)
+
+    t = sim.spawn(job, body)
+    sim.run(until=0.01)  # mid-compute
+    assert t.state is TaskState.RUNNING
+    run_before = t.stats.run_time
+    sim.attach(job, policy=SchedFair(slice_s=0.05), share=1.0)
+    # the hop charged the accrued segment and restarted the slice clock
+    assert t.stats.run_time > run_before
+    st_slot = sim.sched._slots[t.slot]
+    assert st_slot.run_started == pytest.approx(sim.now())
+    charged_at_hop = t.stats.run_time
+    sim.run()
+    assert t.done
+    # conservation: total accounted run time is the requested compute
+    # (plus nothing double-counted at the hop)
+    assert t.stats.run_time == pytest.approx(
+        0.02 + sim.costs.ctx_switch + sim.costs.dispatch_latency, abs=1e-9)
+    assert t.stats.run_time >= charged_at_hop
+
+
+def test_demote_rehomes_busy_job_and_default_multiplexes():
+    """A busy dedicated job demotes live into the default group: queued
+    work lands in the default policy exactly once and keeps completing
+    alongside the incumbent default-group jobs."""
+    sim = SimExecutor(Topology(2, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    rng = random.Random(11)
+    mover, plain = Job("demover"), Job("deplain")
+    lease = sim.attach(mover, policy=SchedFair(slice_s=0.002), share=1.0)
+    tasks = [sim.spawn(mover, _prog_body(rng)) for _ in range(5)]
+    tasks += [sim.spawn(plain, _prog_body(rng)) for _ in range(3)]
+    sim.run(until=0.002)
+    assert lease.group.dedicated
+    default_pol = sim.sched.arbiter.default_policy
+    ready_before = sum(1 for t in mover.tasks if t.state is TaskState.READY)
+    new_lease = sim.demote(mover, share=2.0)
+    assert mover.lease is new_lease and not new_lease.group.dedicated
+    assert new_lease.share == 2.0
+    assert sim.sched.policy_of(mover) is default_pol
+    assert default_pol.ready_count_of(mover) == ready_before
+    sim.run()
+    assert all(t.done for t in tasks)
+    # back to the flat single-group fast path once the last dedicated
+    # group is gone
+    assert not sim.sched.arbiter.multi
+
+
+def test_detach_refusal_enumerates_busy_tasks():
+    """The quiescence satellite: a refused teardown names the offending
+    READY/RUNNING tasks (job + task ids) instead of just refusing."""
+    from repro.core.arbiter import ArbiterError
+
+    sim = SimExecutor(Topology(1, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    job = Job("busyjob")
+
+    def busy_body():
+        yield st.compute(0.05)
+
+    tasks = [sim.spawn(job, busy_body, name=f"busy-{i}") for i in range(3)]
+    sim.run(until=0.001)
+    busy = [t for t in job.tasks
+            if t.state in (TaskState.READY, TaskState.RUNNING)]
+    assert busy
+    with pytest.raises(ArbiterError) as exc:
+        sim.detach(job)
+    msg = str(exc.value)
+    assert f"busyjob#{job.jid}" in msg
+    for t in busy:
+        assert f"{t.name}#{t.tid}={t.state.value}" in msg
+    assert str(len(busy)) in msg
+    del tasks
+
+
+def test_failed_swap_leaves_dedicated_job_state_intact():
+    """A rejected swap (policy instance reuse) must leave the dedicated
+    group's queue and lease untouched — same contract as failed attach."""
+    from repro.core.arbiter import ArbiterError
+
+    sim = SimExecutor(Topology(1, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    job, other = Job("swapvictim"), Job("swapholder")
+    own_policy = SchedFair(slice_s=0.002)
+    used_policy = SchedFair(slice_s=0.002)
+    sim.attach(job, policy=own_policy, share=1.0)
+    sim.attach(other, policy=used_policy, share=1.0)
+    tasks = [sim.spawn(job, _prog_body(random.Random(3))) for _ in range(3)]
+    sim.run(until=0.002)
+    ready_before = own_policy.ready_count_of(job)
+    lease_before = job.lease
+    with pytest.raises(ArbiterError):
+        sim.attach(job, policy=used_policy)  # sibling's instance
+    with pytest.raises(ArbiterError):
+        sim.attach(job, policy=own_policy)  # its own current instance
+    assert job.lease is lease_before
+    assert own_policy.ready_count_of(job) == ready_before
+    sim.run()
+    assert all(t.done for t in tasks)
+
+
+def test_attach_with_raising_custom_policy_leaves_job_state_intact():
+    """Regression: a CUSTOM policy whose attach()/on_job() raises must
+    fail the re-home before any withdrawal — otherwise the job's READY
+    tasks would be left queued in no policy (never dispatched again)."""
+    sim = SimExecutor(Topology(2, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    job = Job("rvictim")
+    tasks = [sim.spawn(job, _prog_body(random.Random(13))) for _ in range(4)]
+    sim.run(until=0.002)
+    default_pol = sim.sched.arbiter.default_policy
+    ready_before = default_pol.ready_count_of(job)
+    lease_before = job.lease
+
+    class BoomPolicy(SchedFair):
+        def attach(self, sched):
+            raise RuntimeError("topology validation failed")
+
+    class BoomOnJob(SchedFair):
+        def on_job(self, j):
+            raise RuntimeError("job rejected")
+
+    for bad in (BoomPolicy(slice_s=0.002), BoomOnJob(slice_s=0.002)):
+        with pytest.raises(RuntimeError):
+            sim.attach(job, policy=bad, share=1.0)
+        assert job.lease is lease_before
+        assert default_pol.ready_count_of(job) == ready_before
+    sim.run()
+    assert all(t.done for t in tasks)
+
+
+def test_failed_demote_from_legacy_policy_leaves_no_phantom_job():
+    """Regression: a demote refused because the dedicated policy lacks
+    remove() must not have pre-registered the job with the default
+    policy — a phantom entry would sit in its rotation forever."""
+    from repro.core.arbiter import ArbiterError
+
+    sim = SimExecutor(Topology(1, 1), SchedCoop(quantum=0.01), max_time=600.0)
+    job = Job("phantom")
+    legacy = RefFair(slice_s=0.002)  # pre-refactor surface: no remove()
+    sim.attach(job, policy=legacy, share=1.0)
+
+    def long_compute():
+        yield st.compute(0.05)
+
+    tasks = [sim.spawn(job, long_compute) for _ in range(3)]
+    sim.run(until=0.001)  # 1 slot: one RUNNING, two queued READY
+    assert any(t.state is TaskState.READY for t in job.tasks)
+    default_pol = sim.sched.arbiter.default_policy
+    with pytest.raises(ArbiterError, match="does not implement"):
+        sim.demote(job)
+    assert job.jid not in default_pol._jobs  # no phantom registration
+    assert job.lease is not None and job.lease.group.policy is legacy
+    sim.run()
+    assert all(t.done for t in tasks)
+
+
 def test_failed_attach_leaves_job_state_intact():
     """Regression: a rejected attach (policy reuse / bad share) must not
     have withdrawn the job's queued tasks or dropped its lease."""
@@ -618,6 +886,69 @@ def test_real_thread_live_rehoming_mid_run():
         rt.shutdown(timeout=5.0)
 
 
+def test_real_thread_live_policy_swap_mid_run():
+    """dedicated→dedicated live swap under real threads: spinners running
+    under SCHED_FAIR swap to a fresh SCHED_RR group mid-flight and keep
+    time-slicing — ticks follow the new policy's interval class."""
+    rt = UsfRuntime(Topology(1, 1), SchedCoop(quantum=0.02))
+    try:
+        job = Job("rtswap")
+        rt.attach(job, policy=SchedFair(slice_s=TICK), share=1.0)
+        stop = threading.Event()
+        spinners = [rt.create(lambda: _spin_until(rt, stop), job=job)
+                    for _ in range(2)]
+        deadline = time.monotonic() + 5.0
+        while (not rt.sched.slots_running(job)
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        assert rt.sched.slots_running(job)
+        swapped = SchedRR(quantum=TICK)
+        lease = rt.attach(job, policy=swapped, share=1.0)  # live swap
+        assert lease.group.dedicated and lease.group.policy is swapped
+        assert rt.sched.policy_of(job) is swapped
+        preempts_at_swap = sum(t.stats.preemptions for t in job.tasks)
+        # both spinners still share the slot under the NEW policy
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            if sum(t.stats.preemptions for t in job.tasks) \
+                    > preempts_at_swap:
+                break
+            time.sleep(0.01)
+        assert sum(t.stats.preemptions for t in job.tasks) \
+            > preempts_at_swap, "no slicing under the swapped-in policy"
+        stop.set()
+        for t in spinners:
+            assert rt.join(t, timeout=10.0)
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
+def test_real_thread_demote_mid_run():
+    """dedicated→default live demotion under real threads: a spinning
+    SCHED_FAIR job demotes into the (cooperative) default group mid-run;
+    its tasks keep completing there and stop being ticked."""
+    rt = UsfRuntime(Topology(2, 1), SchedCoop(quantum=0.02))
+    try:
+        job = Job("rtdemote")
+        rt.attach(job, policy=SchedFair(slice_s=TICK), share=2.0)
+        stop = threading.Event()
+        tasks = [rt.create(lambda: _spin_until(rt, stop), job=job)
+                 for _ in range(3)]  # 3 tasks, 2 slots: one stays READY
+        deadline = time.monotonic() + 5.0
+        while (len(rt.sched.slots_running(job)) < 2
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        lease = rt.demote(job)
+        assert not lease.group.dedicated
+        assert rt.sched.policy_of(job) is rt.sched.arbiter.default_policy
+        stop.set()
+        for t in tasks:
+            assert rt.join(t, timeout=10.0)
+        assert all(t.done for t in tasks)
+    finally:
+        rt.shutdown(timeout=5.0)
+
+
 def test_sleep_routes_through_watchdog_no_timer_threads():
     """The timer-churn satellite: N concurrent timed waits use the single
     watchdog thread, not one threading.Timer thread per call."""
@@ -668,22 +999,24 @@ def test_join_timeout_routes_through_watchdog():
 def test_arm_tick_earlier_interval_supersedes_pending():
     """Regression: a pending long-interval tick (e.g. from a SCHED_RR
     quantum) must not suppress arming a shorter one when the slot hands
-    off to a short-slice policy — the earlier deadline wins."""
+    off to a short-slice policy — the slot migrates to the faster
+    interval class and is serviced at ITS next fire, not after 10s."""
     rt = UsfRuntime(Topology(1, 1), SchedCoop())
     try:
         wd = rt.watchdog
         wd.arm_tick(0, 10.0)  # long tick pending
-        wd.arm_tick(0, 0.01)  # must supersede, not be deduped away
+        wd.arm_tick(0, 0.01)  # must migrate classes, not be deduped away
         with wd._cv:
-            assert wd._tick_next[0] < time.monotonic() + 1.0
+            assert wd._slot_interval[0] == 0.01
+            assert 0 not in wd._classes[10.0]
         deadline = time.monotonic() + 5.0
         while time.monotonic() < deadline:
             if wd.ticks_fired >= 1:
-                break  # the short tick fired; the stale 10s token did not
+                break  # the 0.01s class fired; the 10s class is now empty
             time.sleep(0.005)
         assert wd.ticks_fired >= 1
         with wd._cv:
-            assert 0 not in wd._tick_next  # idle slot: not re-armed
+            assert 0 not in wd._slot_interval  # idle slot: not re-armed
     finally:
         rt.shutdown(timeout=5.0)
 
@@ -770,6 +1103,105 @@ def test_mesh_rescale_resizes_leases_mid_run():
     frac2 = w2[0] / sum(w2)
     assert frac1 > 0.70          # 6:2 split before the event
     assert frac2 < frac1 - 0.05  # reclaim visibly landed after it
+
+
+def test_mesh_collapse_demotes_job_live():
+    """Losing the WHOLE mesh demotes the job into the default group
+    (rescale-driven policy swap without drain): its dedicated lease is
+    gone, in-flight work keeps completing under default multiplexing, and
+    the coordinator stops tracking the dead lease."""
+    from repro.launch.rescale import ElasticCoordinator, MeshRescaleEvent
+
+    sim = SimExecutor(Topology(4, 1), SchedCoop(quantum=0.01), max_time=1e9)
+    train, serve = Job("ctrain"), Job("cserve")
+    coord = ElasticCoordinator(runtime=sim)
+    coord.register(
+        sim.attach(train, policy=SchedFair(slice_s=0.002), share=2.0),
+        demote_on_collapse=True)
+    lease_s = coord.register(
+        sim.attach(serve, policy=SchedCoop(quantum=0.01), share=2.0))
+
+    def churn(n):
+        def gen():
+            for _ in range(n):
+                yield st.compute(0.002)
+                yield st.sleep(0.0005)
+        return gen
+
+    tasks = [sim.spawn(train, churn(30)) for _ in range(4)]
+    tasks += [sim.spawn(serve, churn(30)) for _ in range(4)]
+    sim.run(until=0.01)  # train is busy mid-flight
+
+    shares = coord.on_rescale(MeshRescaleEvent((8, 16), (0, 16)))
+    assert shares["ctrain"] == 0.0
+    assert train.lease is not None and not train.lease.group.dedicated
+    assert sim.sched.policy_of(train) is sim.sched.arbiter.default_policy
+    # the dead dedicated lease left elastic tracking; the sibling did not
+    assert list(coord.leases()) == [lease_s]
+    sim.run()
+    assert all(t.done for t in tasks)
+
+    # re-promotion: a fresh attach + register WITHOUT the flag revokes the
+    # stale opt-in — the next collapse resizes instead of demoting again
+    lease_t2 = sim.attach(train, policy=SchedFair(slice_s=0.002), share=2.0)
+    coord.register(lease_t2)
+    shares2 = coord.on_rescale(MeshRescaleEvent((8, 16), (0, 16)))
+    assert shares2["ctrain"] == 0.0  # share scaled to zero, NOT demoted
+    assert train.lease is lease_t2 and lease_t2.group.dedicated
+    assert lease_t2 in coord.leases()
+
+    # a lease superseded OUT-OF-BAND (here: a direct demote the
+    # coordinator did not perform) is dropped gracefully on the next
+    # event instead of crashing the fan-out mid-loop
+    lease_t3 = sim.attach(train, policy=SchedFair(slice_s=0.002), share=2.0)
+    coord.register(lease_t3, demote_on_collapse=True)
+    sim.demote(train)  # out-of-band: lease_t3 is now dead
+    shares3 = coord.on_rescale(MeshRescaleEvent((8, 16), (0, 16)))
+    assert "ctrain" not in shares3  # dead registration dropped, no crash
+    assert lease_t3 not in coord.leases()
+    assert shares3["cserve"] == 0.0  # siblings still processed
+
+    # a stale flagged registration must not erase the opt-in of a NEWER
+    # live registration of the same job: processing dead lease_t4 first
+    # still leaves lease_t5's flag effective — the job is demoted, not
+    # parked on a dedicated zero-share lease
+    lease_t4 = sim.attach(train, policy=SchedFair(slice_s=0.002), share=2.0)
+    coord.register(lease_t4, demote_on_collapse=True)
+    lease_t5 = sim.attach(train, policy=SchedRR(quantum=0.002), share=2.0)
+    coord.register(lease_t5, demote_on_collapse=True)  # t4 now stale
+    shares4 = coord.on_rescale(MeshRescaleEvent((8, 16), (0, 16)))
+    assert shares4["ctrain"] == 0.0
+    assert train.lease is not None and not train.lease.group.dedicated
+
+    # registering for collapse-demotion without a runtime is refused,
+    # as is flagging a default-group lease (nothing to demote)
+    with pytest.raises(ValueError):
+        ElasticCoordinator().register(lease_s, demote_on_collapse=True)
+    with pytest.raises(ValueError, match="dedicated"):
+        ElasticCoordinator(runtime=sim).register(
+            train.lease, demote_on_collapse=True)
+
+
+def test_rescale_reregister_updates_flag_without_duplicating():
+    """Re-registering the same lease (e.g. to revoke its collapse opt-in)
+    must not duplicate it in the fan-out — a duplicate would apply every
+    rescale twice (share scaled by scale^2)."""
+    from repro.launch.rescale import ElasticCoordinator, MeshRescaleEvent
+
+    sim = SimExecutor(Topology(4, 1), SchedCoop(quantum=0.01), max_time=1e9)
+    job = Job("dup")
+    lease = sim.attach(job, policy=SchedCoop(quantum=0.01), share=2.0)
+    coord = ElasticCoordinator(runtime=sim)
+    coord.register(lease, demote_on_collapse=True)
+    coord.register(lease)  # revoke the flag: must NOT duplicate
+    assert list(coord.leases()) == [lease]
+    shares = coord.on_rescale(MeshRescaleEvent((8,), (4,)))
+    assert shares["dup"] == 2.0 * 0.5  # halved once, not squared
+    assert lease.share == 1.0
+    # and the revoked flag means a collapse resizes instead of demoting
+    coord.on_rescale(MeshRescaleEvent((4,), (0,)))
+    assert job.lease is lease and lease.group.dedicated
+    assert lease.share == 0.0
 
 
 def test_mesh_rescale_regrow_restores_share():

@@ -149,6 +149,80 @@ def test_incremental_eevdf_matches_bruteforce(seed):
         assert ref._min_vruntime == new._min_vruntime
 
 
+@pytest.mark.parametrize("seed", range(10))
+def test_swap_churn_remove_reinsert_preserves_pick_order(seed):
+    """The any↔any migration path withdraws a whole job's READY pool
+    (``Policy.remove``) and may re-admit it later (e.g. a demote back, or
+    repeated policy swaps through the default group). Lockstep SchedFair
+    against the RefFair spec under that churn: after every
+    withdraw-all/re-admit round the incremental sums, min_vruntime, pool
+    virtual time and pick order must stay bit-identical."""
+    rng = random.Random(40_000 + seed)
+    n_slots = rng.randint(1, 6)
+    jobs = [Job(f"sw{seed}-{i}", nice=rng.choice([0, 0, 5, -5]))
+            for i in range(3)]
+    tasks = [Task(jobs[i % 3]) for i in range(rng.randint(6, 30))]
+    ref, new = RefFair(slice_s=0.002), SchedFair(slice_s=0.002)
+    ref.remove = lambda t: ref._ready.remove(t)  # list spec of remove()
+    now = 0.0
+    queued: list[Task] = []
+    running: dict[int, tuple[Task, int]] = {}
+    withdrawn: list[Task] = []  # a "migrated-away" pool awaiting re-admit
+    for step in range(500):
+        act = rng.random()
+        if act < 0.3 and len(queued) + len(running) + len(withdrawn) \
+                < len(tasks):
+            cand = [t for t in tasks if t not in queued
+                    and t.tid not in running and t not in withdrawn]
+            t = rng.choice(cand)
+            t.last_slot = rng.choice([None] + list(range(n_slots)))
+            ref.on_ready(t)
+            new.on_ready(t)
+            queued.append(t)
+        elif act < 0.45 and queued:
+            # the swap: withdraw EVERY queued task of one job, job.tasks
+            # order — exactly the arbiter's _withdraw_ready traversal
+            job = rng.choice(jobs)
+            moving = [t for t in job.tasks if t in queued]
+            for t in moving:
+                ref.remove(t)
+                new.remove(t)
+                queued.remove(t)
+            withdrawn.extend(moving)
+        elif act < 0.6 and withdrawn:
+            # the demote-back: re-admit the withdrawn pool in order
+            for t in withdrawn:
+                ref.on_ready(t)
+                new.on_ready(t)
+                queued.append(t)
+            withdrawn.clear()
+        elif act < 0.85 and queued:
+            slot = rng.randrange(n_slots)
+            a, b = ref.pick(slot), new.pick(slot)
+            assert a is b, f"step {step}: ref {a} vs new {b}"
+            queued.remove(a)
+            running[a.tid] = (a, slot)
+            ref.on_run(a, slot, now)
+            new.on_run(a, slot, now)
+        elif running:
+            tid = rng.choice(sorted(running))
+            t, slot = running.pop(tid)
+            elapsed = rng.uniform(1e-4, 1e-2)
+            now += elapsed
+            t.last_slot = slot
+            ref.on_stop(t, slot, now, elapsed, StopReason.BLOCK)
+            new.on_stop(t, slot, now, elapsed, StopReason.BLOCK)
+        assert ref.ready_count() == new.ready_count()
+        assert ref._min_vruntime == new._min_vruntime
+        if new.ready_count():
+            assert ref._pool_virtual_time() == pytest.approx(
+                new._wvsum / new._wsum, abs=1e-9)
+    # drain both pools: identical pick order to the very end
+    while new.ready_count():
+        a, b = ref.pick(0), new.pick(0)
+        assert a is b
+
+
 def test_incremental_eevdf_heaps_stay_bounded_under_churn():
     """Steady-state churn with a pool that never drains: lazy-invalidated
     heap entries must be compacted away, not accumulate per admission —

@@ -131,6 +131,18 @@ def test_serving_engine_under_usf():
         assert s1.served == 3 and s2.served == 3
         for r in results:
             assert r["latency"] > 0
+
+        # live policy change without drain (the rescale-driven swap):
+        # s1 swaps to a fresh dedicated policy, s2 demotes into the
+        # default group — both keep serving without restarting
+        lease1 = s1.set_policy(SchedCoop(quantum=0.02), share=2.0)
+        assert lease1.group.dedicated and s1.job.lease is lease1
+        lease2 = s2.set_policy(None)
+        assert not lease2.group.dedicated
+        t = usf.create(client, job=gw.job, name="client-post-swap")
+        assert usf.join(t, timeout=120.0), "post-swap client timed out"
+        assert s1.served == 4 and s2.served == 4
+
         s1.stop()
         s2.stop()
     finally:

@@ -256,6 +256,101 @@ def test_free_mode_is_unmanaged():
         runtime.shutdown(timeout=5.0)
 
 
+def test_watchdog_heap_coalesces_256_slots_into_interval_classes():
+    """The watchdog-scale satellite: 256 slots armed across 2 tick
+    intervals ride TWO periodic heap entries, not 256 — heap size is
+    O(distinct intervals + pending timed wakeups), never O(slots)."""
+    runtime = UsfRuntime(Topology(256, 1), SchedCoop())
+    try:
+        wd = runtime.watchdog
+        # long intervals so nothing fires while we inspect the heap
+        for sid in range(256):
+            wd.arm_tick(sid, 5.0 if sid % 2 == 0 else 8.0)
+        stats = wd.tick_heap_stats()
+        assert stats["slots_armed"] == 256
+        assert stats["interval_classes"] == 2
+        assert stats["tick_entries"] == 2, (
+            f"per-slot heap entries are back: {stats}")
+        # re-arming every slot again is pure dedup: zero heap growth
+        for sid in range(256):
+            wd.arm_tick(sid, 5.0 if sid % 2 == 0 else 8.0)
+        assert wd.tick_heap_stats()["tick_entries"] == 2
+        # migrating half the slots to the SHORTER class (an earlier
+        # service: migrates immediately) keeps the bound at the number of
+        # interval classes (the abandoned entry dies at pop); arming the
+        # other half with a LONGER period is refused until the short
+        # class fires — an arm never lengthens a pending service
+        for sid in range(1, 256, 2):
+            wd.arm_tick(sid, 5.0)  # 8.0 -> 5.0: earlier, migrates now
+        for sid in range(0, 256, 2):
+            wd.arm_tick(sid, 8.0)  # 5.0 -> 8.0: later, deferred to fire
+        stats = wd.tick_heap_stats()
+        assert stats["tick_entries"] <= 2
+        assert stats["interval_classes"] <= 2
+        with wd._cv:
+            assert all(i == 5.0 for i in wd._slot_interval.values())
+        # timed wakeups share the heap and still fire while classes armed
+        fired = threading.Event()
+        wd.call_later(0.05, fired.set)
+        assert fired.wait(5.0), "timed wakeup starved by tick classes"
+        # cancelled timed entries are still compacted away (the heap must
+        # not pin dead waiter closures among the class entries)
+        handles = [wd.call_later(300.0, lambda: None) for _ in range(200)]
+        for h in handles:
+            h.cancel()
+        assert wd.tick_heap_stats()["heap_len"] < 100
+    finally:
+        runtime.shutdown(timeout=5.0)
+
+
+def test_watchdog_scale_two_intervals_under_real_threads():
+    """Steady-state bound under genuinely ticking real threads: two
+    preemptive jobs with different tick periods spin across the slots;
+    sampled over many fire/re-arm rounds the heap never holds more tick
+    entries than interval classes, preemptions are delivered for both
+    periods, and sleep/join timeouts keep firing throughout."""
+    from repro.core.policies import SchedFair, SchedRR
+
+    tick_a, tick_b = 0.02, 0.035
+    runtime = UsfRuntime(Topology(2, 1), SchedCoop())
+    try:
+        fair, rr = Job("fair"), Job("rr")
+        runtime.attach(fair, policy=SchedFair(slice_s=tick_a), share=1.0)
+        runtime.attach(rr, policy=SchedRR(quantum=tick_b), share=1.0)
+        stop = threading.Event()
+
+        def spin():
+            n = 0
+            while not stop.is_set():
+                n += 1
+                if n % 500 == 0:
+                    runtime.checkpoint()
+
+        tasks = [runtime.create(spin, job=fair) for _ in range(2)]
+        tasks += [runtime.create(spin, job=rr) for _ in range(2)]
+        max_tick_entries = 0
+        deadline = time.monotonic() + 20 * tick_a
+        while time.monotonic() < deadline:
+            s = runtime.watchdog.tick_heap_stats()
+            max_tick_entries = max(max_tick_entries, s["tick_entries"])
+            time.sleep(0.005)
+        assert max_tick_entries <= 2, (
+            f"{max_tick_entries} tick entries for 2 interval classes")
+        assert runtime.watchdog.ticks_fired > 0
+        # a join timeout rides the same heap and still fires on time
+        t0 = time.monotonic()
+        assert runtime.join(tasks[0], timeout=2 * tick_a) is False
+        assert time.monotonic() - t0 < 5.0
+        stop.set()
+        for t in tasks:
+            assert runtime.join(t, timeout=10.0)
+        # both interval classes delivered preemptions to their spinners
+        assert sum(t.stats.preemptions for t in fair.tasks) >= 1
+        assert sum(t.stats.preemptions for t in rr.tasks) >= 1
+    finally:
+        runtime.shutdown(timeout=5.0)
+
+
 def test_affinity_hint_stored_and_returned(rt):
     """§4.3.2: setaffinity is a hint; getaffinity returns the stored hint."""
     job = Job("j")
