@@ -1,13 +1,16 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test test-all bench-sched-ops bench-colocation
+.PHONY: check test test-all bench-sched-ops bench-colocation \
+	bench-multiprocess bench-multiprocess-smoke
 
 ## check: the fast CI gate — clean-collecting tier-1 tests (slow ones are
 ## deselected via pyproject addopts) + the sched-ops/arbiter microbench in
 ## smoke mode, perf-gated: SCHED_COOP/SCHED_FAIR pick-cycle throughput must
-## stay within 30% of the committed BENCH_sched_ops.json baseline
-check: test bench-sched-ops
+## stay within 30% of the committed BENCH_sched_ops.json baseline — plus the
+## cross-process broker benchmark in smoke mode (machinery end-to-end; the
+## >=1.5x ratio is asserted only in the full nightly run)
+check: test bench-sched-ops bench-multiprocess-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -21,3 +24,10 @@ bench-sched-ops:
 
 bench-colocation:
 	$(PY) -m benchmarks.colocation
+
+bench-multiprocess:
+	$(PY) -m benchmarks.multiprocess
+
+bench-multiprocess-smoke:
+	$(PY) -m benchmarks.multiprocess --smoke \
+		--out BENCH_multiprocess.smoke.json

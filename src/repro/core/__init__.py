@@ -12,6 +12,9 @@ A centralized, multi-job, user-space scheduling framework:
   nice-weighted proportional slot leases with work-conserving borrowing,
   elastic resize, and attach/detach of jobs running *different* intra-job
   policies side by side (SCHED_COOP co-located with SCHED_FAIR).
+* ``lease`` (``LeaseTable``)  — the extracted lease/quota machinery
+  (largest-remainder apportionment + the I5 borrow order) shared by the
+  arbiter and the cross-process ``repro.ipc.NodeBroker``.
 * ``policies``            — SCHED_COOP (the paper's default), SCHED_FAIR
   (EEVDF-like preemptive stand-in for Linux), SCHED_RR.
 * ``sync``                — cooperative synchronization primitives with
@@ -27,6 +30,7 @@ A centralized, multi-job, user-space scheduling framework:
 from repro.core.task import Task, Job, TaskState
 from repro.core.topology import Topology, Slot
 from repro.core.arbiter import ArbiterError, SlotArbiter, SlotLease
+from repro.core.lease import LeaseTable, apportion, borrow_order
 from repro.core.scheduler import Scheduler
 from repro.core.policies import SchedCoop, SchedFair, SchedRR, Policy
 from repro.core import sync
@@ -42,6 +46,9 @@ __all__ = [
     "SlotArbiter",
     "SlotLease",
     "ArbiterError",
+    "LeaseTable",
+    "apportion",
+    "borrow_order",
     "Policy",
     "SchedCoop",
     "SchedFair",

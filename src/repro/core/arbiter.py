@@ -52,6 +52,7 @@ from __future__ import annotations
 
 from typing import TYPE_CHECKING, Optional
 
+from repro.core.lease import LeaseTable
 from repro.core.policies.base import Policy, StopReason
 from repro.core.policies.sched_fair import nice_to_weight
 from repro.core.task import Job, Task, TaskState
@@ -152,8 +153,12 @@ class SlotArbiter:
         self._default = default_policy
         self._default_group = ArbiterGroup(default_policy, dedicated=False)
         self._groups: list[ArbiterGroup] = [self._default_group]
-        self._leases: dict[int, SlotLease] = {}  # jid -> lease, attach order
-        self._n_slots = 0
+        #: the shared lease/quota machinery (repro.core.lease) — the same
+        #: table class the node-level broker apportions processes with
+        self._table = LeaseTable()
+        #: jid -> lease, attach order (the table's own dict, bound once so
+        #: the multi-group scheduling points skip an attribute hop)
+        self._leases: dict[int, SlotLease] = self._table.entries
         self._bind_single()
 
     # ------------------------------------------------------------------ #
@@ -161,8 +166,15 @@ class SlotArbiter:
     # ------------------------------------------------------------------ #
     def attach(self, sched) -> None:
         self.sched = sched
-        self._n_slots = sched.topology.n_slots
+        self._table.capacity = sched.topology.n_slots
         self._default.attach(sched)
+        self._recompute_quotas()
+
+    def set_capacity(self, n_slots: int) -> None:
+        """Re-apportion the leases over a new effective slot pool (elastic
+        slot parking: a broker revoke shrinks the process's width, and the
+        in-process quotas must track the *active* pool, not the topology)."""
+        self._table.capacity = int(n_slots)
         self._recompute_quotas()
 
     @property
@@ -451,31 +463,13 @@ class SlotArbiter:
             self._bind_single()
 
     def _recompute_quotas(self) -> None:
-        """Largest-remainder apportionment of the slot pool by share."""
-        n = self._n_slots
-        leases = list(self._leases.values())
+        """Largest-remainder apportionment of the slot pool by share —
+        delegated to the shared ``LeaseTable`` (repro.core.lease), then
+        aggregated per policy group."""
         for g in self._groups:
             g.quota = 0
-        if not leases or n <= 0:
-            return
-        total = sum(l.share for l in leases)
-        if total <= 0.0:
-            # all-zero shares: fall back to equal entitlement
-            total = float(len(leases))
-            exacts = [(n / total, l) for l in leases]
-        else:
-            exacts = [(n * l.share / total, l) for l in leases]
-        granted = 0
-        remainders = []
-        for i, (exact, lease) in enumerate(exacts):
-            q = int(exact)
-            lease.quota = q
-            granted += q
-            remainders.append((-(exact - q), i, lease))
-        remainders.sort()
-        for k in range(n - granted):
-            remainders[k][2].quota += 1
-        for lease in leases:
+        self._table.recompute()
+        for lease in self._leases.values():
             lease.group.quota += lease.quota
 
     def _resync_in_use(self) -> None:
@@ -530,9 +524,13 @@ class SlotArbiter:
 
         Candidate order: groups holding spare lease first (largest spare
         wins, ties by attach order), then — work-conserving borrowing —
-        groups already at/over quota, least-over first. A borrowing grant
-        is therefore only reachable after every spare-lease group declined,
-        which is exactly the I5 grant rule.
+        groups already at/over quota, least-over first. This is exactly
+        ``repro.core.lease.borrow_order`` — the shared I5 order the node
+        broker applies at process granularity — inlined into the filter
+        pass because this runs per pick (lockstep-asserted equivalent in
+        tests/test_lease_table.py). A borrowing grant is therefore only
+        reachable after every spare-lease group declined, which is
+        exactly the I5 grant rule.
         """
         candidates = []
         for i, g in enumerate(self._groups):

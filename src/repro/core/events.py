@@ -170,6 +170,13 @@ class SimExecutor:
         """nosv_detach: unregister a quiescent job, releasing its lease."""
         self.sched.detach_job(job)
 
+    def set_slot_target(self, n: Optional[int]) -> int:
+        """Elastic slot parking in virtual time: cap the effective width at
+        ``n`` slots (``None`` restores the topology). Surplus slots park at
+        their tasks' next scheduling point, exactly like the real-thread
+        runtime — the deterministic twin for testing node-level revokes."""
+        return self.sched.set_slot_target(n)
+
     def run(self, *, until: Optional[float] = None) -> SchedStats:
         """Drain all events (or run until virtual time ``until``)."""
         limit = until if until is not None else self.max_time

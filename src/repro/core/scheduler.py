@@ -92,9 +92,18 @@ class Scheduler:
         self._dispatch_cb = dispatch
         self.ctx_switch_cost = ctx_switch_cost
         self._slots = [_SlotState() for _ in topology.slots]
-        #: idle-slot free-list: exactly the slots with ``running is None``.
-        #: Maintained by _run_on/_stop_running so fill never scans all slots.
+        #: idle-slot free-list: exactly the slots with ``running is None``
+        #: that are not parked. Maintained by _run_on/_stop_running so fill
+        #: never scans all slots.
         self._idle: set[int] = set(range(topology.n_slots))
+        #: elastic slot parking (node-level coordination): slots withdrawn
+        #: from dispatch because the effective width was capped below the
+        #: topology (``set_slot_target`` — a broker revoke, or an explicit
+        #: cap). A slot is in exactly one of {running, _idle, _parked}.
+        self._parked: set[int] = set()
+        #: the effective width; == n_slots means parking is inert (the
+        #: single compare in ``_fill`` is the whole fast-path cost)
+        self._slot_target: int = topology.n_slots
         self.jobs: dict[int, Job] = {}
         self.all_tasks: list[Task] = []
         self._lock = threading.RLock()
@@ -147,6 +156,75 @@ class Scheduler:
     def policy_of(self, job: Job) -> Policy:
         """The intra-job policy currently serving ``job``'s tasks."""
         return self.arbiter.policy_of(job)
+
+    # ------------------------------------------------------------------ #
+    # elastic slot parking (node-level width coordination)
+    # ------------------------------------------------------------------ #
+    def set_slot_target(self, n: Optional[int]) -> int:
+        """Cap the effective width at ``n`` slots (``None`` restores the
+        full topology); returns the effective target.
+
+        This is how a node-level grant/revoke (``repro.ipc``) — or any
+        in-process width cap — lands on a live scheduler:
+
+        * **shrink**: surplus *idle* slots park immediately; surplus
+          *running* slots are flagged need-resched (the same flag the
+          lease-revocation path uses), so each parks at its task's next
+          scheduling point or explicit ``checkpoint()`` — for preemptive
+          intra-job policies that is within one tick period. The running
+          task is requeued, not lost: it resumes on a surviving slot.
+        * **grow**: parked slots rejoin the idle pool and are refilled
+          with queued work immediately (work-conserving grant).
+
+        The target is floored at one slot: a process is never throttled to
+        zero width (liveness — a dead or miserly broker must degrade a
+        worker, never deadlock it). Job leases re-apportion over the
+        *active* pool so intra-process shares keep tracking quotas.
+        """
+        with self._lock:
+            n_total = len(self._slots)
+            target = n_total if n is None else max(1, min(int(n), n_total))
+            self._slot_target = target
+            now = self.clock()
+            active = n_total - len(self._parked)
+            if active < target:
+                for sid in sorted(self._parked):
+                    if active >= target:
+                        break
+                    self._parked.discard(sid)
+                    self._idle.add(sid)
+                    self._slots[sid].idle_since = now
+                    active += 1
+            elif active > target:
+                surplus = active - target
+                # park idle slots first (highest ids — deterministic)...
+                for sid in sorted(self._idle, reverse=True):
+                    if surplus == 0:
+                        break
+                    self._idle.discard(sid)
+                    self._parked.add(sid)
+                    surplus -= 1
+                # ...then flag surplus running slots: their tasks park the
+                # slot at their next scheduling point (need-resched, the
+                # lease-revocation path)
+                if surplus:
+                    for sid in range(n_total - 1, -1, -1):
+                        if surplus == 0:
+                            break
+                        st = self._slots[sid]
+                        if st.running is not None and not st.need_resched:
+                            st.need_resched = True
+                            surplus -= 1
+            self.arbiter.set_capacity(target)
+            self._fill_idle_slots(now)
+            return target
+
+    def slot_target(self) -> int:
+        return self._slot_target
+
+    def parked_slot_ids(self) -> list[int]:
+        with self._lock:
+            return sorted(self._parked)
 
     # ------------------------------------------------------------------ #
     # the six scheduling entry points
@@ -359,6 +437,15 @@ class Scheduler:
         st = self._slots[slot_id]
         if st.running is not None:
             return None
+        if self._slot_target < len(self._slots) and \
+                len(self._slots) - len(self._parked) > self._slot_target:
+            # elastic parking: the effective width is capped and this slot
+            # is surplus — withdraw it instead of refilling (the slot's
+            # previous task, if any, was requeued by its scheduling point
+            # and will resume on a surviving slot)
+            self._idle.discard(slot_id)
+            self._parked.add(slot_id)
+            return None
         task = self.arbiter.pick(slot_id)
         if task is None:
             return None
@@ -426,8 +513,11 @@ class Scheduler:
             return {
                 "now": self.clock(),
                 "policy": self.arbiter.describe(),
-                "slots_busy": self.topology.n_slots - len(self._idle),
+                "slots_busy": (self.topology.n_slots - len(self._idle)
+                               - len(self._parked)),
                 "slots": self.topology.n_slots,
+                "slots_parked": len(self._parked),
+                "slot_target": self._slot_target,
                 "task_states": states,
                 "ready": self.arbiter.ready_count(),
                 "leases": self.arbiter.lease_snapshot(),

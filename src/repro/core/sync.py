@@ -66,24 +66,71 @@ class CoopMutex:
         task = _gated_task(self._rt)
         return task if task is not None else threading.get_ident()
 
-    def lock(self) -> None:
+    def lock(self, timeout: Optional[float] = None) -> bool:
+        """Acquire; returns True. With ``timeout`` (seconds) returns False
+        if ownership was not handed over in time — consistent with
+        ``CoopEvent.wait(timeout)``, for gated tasks (a timer on the
+        runtime's watchdog heap withdraws the waiter and resubmits the
+        task) and plain threads (timed wait on the embedded Event) alike.
+        An unlock racing the expiry is benign: whichever side dequeues the
+        waiter first decides, and a handoff that already reserved us wins
+        (the lock is held — slightly late beats released-to-nobody)."""
         task = _gated_task(self._rt)
         me = task if task is not None else threading.get_ident()
         with self._spin:
             if self._owner is None:
                 self._owner = me
-                return
+                return True
+            if timeout is not None and timeout <= 0:
+                return False
             w = _Waiter(task)
             self._queue.append(w)
+        if timeout is None:
+            w.wait(self._rt)
+            with self._spin:  # handoff completed: claim ownership
+                assert self._owner is _HANDOFF
+                self._owner = me
+            return True
+        if task is None:  # plain thread: timed wait on the embedded Event
+            if not w.event.wait(timeout):
+                with self._spin:
+                    try:
+                        self._queue.remove(w)
+                        return False
+                    except ValueError:
+                        pass  # unlock already reserved us: claim below
+            with self._spin:
+                assert self._owner is _HANDOFF
+                self._owner = me
+            return True
+        # gated task: timed nosv_pause via the watchdog heap
+        timed_out = [False]
+
+        def expire() -> None:
+            with self._spin:
+                try:
+                    self._queue.remove(w)
+                except ValueError:
+                    return  # unlock already reserved us (handoff in flight)
+                timed_out[0] = True
+            self._rt.ready(task)
+
+        timer = self._rt.call_later(timeout, expire)
         w.wait(self._rt)
-        with self._spin:  # handoff completed: claim ownership
+        timer.cancel()
+        if timed_out[0]:
+            return False
+        with self._spin:
             assert self._owner is _HANDOFF
             self._owner = me
+        return True
 
     def unlock(self) -> None:
         nxt: Optional[_Waiter] = None
         with self._spin:
-            if self._owner is not self._me():
+            # equality, not identity: a plain-thread owner is a fresh int
+            # from get_ident() per call (equal value, not the same object)
+            if self._owner is _HANDOFF or self._owner != self._me():
                 raise RuntimeError("unlock by non-owner")
             if self._queue:
                 nxt = self._queue.popleft()

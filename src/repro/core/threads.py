@@ -502,6 +502,19 @@ class UsfRuntime:
         """Unregister a quiescent job, releasing its lease to the siblings."""
         self.sched.detach_job(job)
 
+    def set_slot_target(self, n: Optional[int]) -> int:
+        """Elastic slot parking: cap the runtime's effective width at ``n``
+        slots (``None`` restores the full topology); returns the target.
+
+        Surplus slots park at their tasks' next scheduling point (the
+        need-resched / lease-revocation path — within one watchdog tick
+        period for preemptive-policy tasks with checkpoints); a regrow
+        unparks and refills immediately. Floored at one slot, so a broker
+        revoke can throttle this process but never deadlock it. This is
+        the landing point of node-level grants (``repro.ipc.BrokerClient``
+        binds it) and works equally for in-process width caps."""
+        return self.sched.set_slot_target(n)
+
     # ------------------------------------------------------------------ #
     # nOS-V-like blocking API (used by repro.core.sync)
     # ------------------------------------------------------------------ #

@@ -1,0 +1,31 @@
+"""Cross-process USF: the node-level coordination layer.
+
+The paper's headline results are *multi-process*: independent processes
+(nested BLAS, multi-process LLaMA inference, MD) co-located on one node,
+coordinated purely in user space. This package is that layer:
+
+* ``NodeBroker`` (broker.py) — one per node: apportions the node's slots
+  across registered processes with the same lease machinery
+  (``repro.core.lease``) the in-process ``SlotArbiter`` uses for jobs;
+  heartbeat-based liveness reclaims a dead worker's lease.
+* ``BrokerClient`` (client.py) — one per worker process: registers a
+  share, receives grants, and lands them on the runtime's elastic slot
+  parking (``UsfRuntime.set_slot_target``). A dead broker degrades the
+  worker to free-running — never a deadlock.
+* ``protocol`` — the tiny length-prefixed JSON framing over Unix sockets.
+
+Scheduling is thus three-level: NodeBroker (processes) → SlotArbiter
+(jobs) → intra-job policies (tasks), every level speaking leases.
+"""
+
+from repro.ipc.broker import BrokerError, NodeBroker, ProcLease
+from repro.ipc.client import BrokerClient
+from repro.ipc.protocol import default_socket_path
+
+__all__ = [
+    "NodeBroker",
+    "BrokerClient",
+    "BrokerError",
+    "ProcLease",
+    "default_socket_path",
+]

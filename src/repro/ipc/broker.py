@@ -1,0 +1,454 @@
+"""NodeBroker — the node-level lease broker (cross-process USF).
+
+One broker per node apportions the node's slots across *processes*, the
+same way the in-process ``SlotArbiter`` apportions one scheduler's slots
+across jobs — literally with the same machinery (``repro.core.lease``):
+
+* every registered worker process holds a node lease: a share weight
+  apportioned into an integer ``quota`` by largest remainder;
+* grants are **work-conserving**: capacity a worker cannot use (its
+  demand — its own topology width — is below its quota) is redistributed
+  to wanting workers in the I5 borrow order (least-over-quota first), so
+  no node slot idles while a sibling process has demand;
+* leases are **elastic**: ``resize``/``rescale`` ops re-apportion at
+  runtime (the cross-process twin of ``SlotLease.resize``, and the
+  landing point of ``MeshRescaleEvent`` routing);
+* liveness is **heartbeat-based**: a worker that dies abruptly is
+  detected by socket EOF (immediate) or by missed heartbeats (wedged
+  process with an open socket) and its lease is reclaimed — the
+  survivors' grants grow within one reaping pass.
+
+The broker runs as a thread in a designated process (``NodeBroker(...).
+start()``) or standalone (``python -m repro.ipc.broker``). It needs no
+special permissions: rendezvous is a Unix-domain socket in a user-writable
+path. Workers connect through ``repro.ipc.client.BrokerClient``, whose
+grants land on ``UsfRuntime.set_slot_target`` (elastic slot parking); a
+dead broker degrades every worker to free-running — coordination is an
+optimization, never a liveness dependency.
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import os
+import selectors
+import socket
+import threading
+import time
+from typing import Optional
+
+from repro.core.lease import LeaseTable, borrow_order
+from repro.ipc.protocol import (
+    FrameDecoder,
+    ProtocolError,
+    default_socket_path,
+    send_msg,
+)
+
+_WID = itertools.count()
+
+
+class BrokerError(RuntimeError):
+    pass
+
+
+class ProcLease:
+    """One registered worker process's claim on the node's slots.
+
+    A ``LeaseTable`` entry (``share``/``quota``/``in_use``), plus the
+    broker-side connection state. ``want`` is the worker's demand (its own
+    topology width); ``granted`` is the pushed allotment — ``in_use``
+    mirrors it so the shared I5 borrow order applies unchanged.
+    """
+
+    __slots__ = ("wid", "name", "pid", "share", "quota", "in_use", "want",
+                 "granted", "last_beat", "conn")
+
+    def __init__(self, wid: int, name: str, pid: int, share: float,
+                 want: int, conn: socket.socket):
+        self.wid = wid
+        self.name = name
+        self.pid = pid
+        self.share = share
+        self.quota = 0
+        self.in_use = 0
+        self.want = want
+        self.granted = 0
+        self.last_beat = time.monotonic()
+        self.conn = conn
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"ProcLease({self.name}#{self.wid} pid={self.pid} "
+                f"share={self.share:.1f} {self.granted}/{self.quota})")
+
+
+class NodeBroker:
+    """Node-level slot broker over a Unix-domain socket.
+
+    Parameters
+    ----------
+    path:               rendezvous socket path (default: per-user tmp path).
+    capacity:           node slots to apportion (default: ``os.cpu_count()``).
+    heartbeat_timeout:  seconds of silence before a worker is declared dead
+                        and its lease reclaimed (socket EOF reclaims
+                        immediately; this catches wedged-but-open workers).
+    """
+
+    def __init__(self, path: Optional[str] = None, *,
+                 capacity: Optional[int] = None,
+                 heartbeat_timeout: float = 1.0):
+        self.path = path or default_socket_path()
+        self.capacity = int(capacity if capacity is not None
+                            else (os.cpu_count() or 1))
+        if self.capacity <= 0:
+            raise BrokerError(f"capacity must be positive, got {self.capacity}")
+        self.heartbeat_timeout = float(heartbeat_timeout)
+        self._table = LeaseTable(self.capacity)
+        self._lock = threading.Lock()
+        self._sel: Optional[selectors.BaseSelector] = None
+        self._listener: Optional[socket.socket] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        #: connections whose grant push failed mid-_regrant (wedged or
+        #: gone); dropped by the serve loop OUTSIDE the table lock —
+        #: _drop -> _regrant from inside _regrant would deadlock
+        self._dead_conns: list[socket.socket] = []
+        self._epoch = 0
+        #: lifetime counters (introspection / tests)
+        self.registrations = 0
+        self.reclaims = 0
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    def start(self) -> str:
+        """Bind the socket and serve from a daemon thread; returns the
+        rendezvous path (pass it to the workers' ``BrokerClient``)."""
+        self._bind()
+        self._thread = threading.Thread(
+            target=self._serve, name="usf-node-broker", daemon=True
+        )
+        self._thread.start()
+        return self.path
+
+    def serve_forever(self) -> None:
+        """Blocking variant (standalone broker process)."""
+        self._bind()
+        self._serve()
+
+    def _bind(self) -> None:
+        if self._listener is not None:
+            raise BrokerError("broker already started")
+        if os.path.exists(self.path):
+            # never hijack a LIVE broker on a shared rendezvous path (the
+            # per-user default): probe it — only a stale socket left by a
+            # dead broker may be unlinked and rebound
+            probe = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            probe.settimeout(0.5)
+            try:
+                probe.connect(self.path)
+            except OSError:
+                pass  # nobody listening: stale file, safe to reclaim
+            else:
+                raise BrokerError(
+                    f"a broker is already serving {self.path}; connect a "
+                    "BrokerClient to it or pick another path")
+            finally:
+                probe.close()
+            try:
+                os.unlink(self.path)
+            except FileNotFoundError:
+                pass
+        lst = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        lst.bind(self.path)
+        lst.listen(64)
+        lst.setblocking(False)
+        self._listener = lst
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(lst, selectors.EVENT_READ, None)
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop_evt.set()
+        t = self._thread
+        if t is not None:
+            t.join(timeout)
+        self._cleanup()
+
+    def _cleanup(self) -> None:
+        with self._lock:
+            for lease in list(self._table.values()):
+                try:
+                    lease.conn.close()
+                except OSError:
+                    pass
+            self._table.entries.clear()
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+            self._listener = None
+        if self._sel is not None:
+            self._sel.close()
+            self._sel = None
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+
+    # ------------------------------------------------------------------ #
+    # event loop
+    # ------------------------------------------------------------------ #
+    def _serve(self) -> None:
+        sel = self._sel
+        poll = min(0.05, self.heartbeat_timeout / 4)
+        try:
+            while not self._stop_evt.is_set():
+                for key, _ in sel.select(timeout=poll):
+                    if key.data is None:
+                        self._accept()
+                    else:
+                        self._service(key.fileobj, key.data)
+                self._reap_stale()
+                self._flush_dead()
+        finally:
+            self._cleanup()
+
+    def _accept(self) -> None:
+        try:
+            conn, _ = self._listener.accept()
+        except OSError:
+            return
+        conn.setblocking(False)
+        # registered with data=[lease-or-None]: the first message on the
+        # connection must be `register`, which fills the cell in
+        self._sel.register(conn, selectors.EVENT_READ, [None, FrameDecoder()])
+
+    def _service(self, conn: socket.socket, cell: list) -> None:
+        lease: Optional[ProcLease] = cell[0]
+        decoder: FrameDecoder = cell[1]
+        try:
+            data = conn.recv(65536)
+        except (BlockingIOError, InterruptedError):
+            return
+        except OSError:
+            data = b""
+        if not data:
+            # EOF / reset: a killed worker process lands here — reclaim
+            # its lease immediately (faster than the heartbeat timeout)
+            self._drop(conn, cell, reclaim=True)
+            return
+        try:
+            msgs = decoder.feed(data)
+        except (ProtocolError, ValueError):
+            self._drop(conn, cell, reclaim=True)
+            return
+        for msg in msgs:
+            try:
+                self._handle(conn, cell, msg)
+            except Exception:
+                # one malformed message (missing/mistyped fields) costs its
+                # SENDER the connection — never the broker loop, and never
+                # the sibling workers' coordination
+                self._drop(conn, cell, reclaim=True)
+                return
+
+    def _handle(self, conn: socket.socket, cell: list, msg: dict) -> None:
+        lease: Optional[ProcLease] = cell[0]
+        op = msg.get("op")
+        if lease is not None:
+            lease.last_beat = time.monotonic()
+        if op == "register":
+            with self._lock:
+                if lease is None:
+                    lease = ProcLease(
+                        next(_WID),
+                        str(msg.get("name", "worker")),
+                        int(msg.get("pid", 0)),
+                        max(0.0, float(msg.get("share", 1.0))),
+                        max(1, int(msg.get("slots", 1))),
+                        conn,
+                    )
+                    cell[0] = lease
+                    self._table.add(lease.wid, lease)
+                    self.registrations += 1
+                else:  # re-register: update the existing lease in place
+                    lease.share = max(0.0, float(msg.get("share", lease.share)))
+                    lease.want = max(1, int(msg.get("slots", lease.want)))
+                self._regrant()
+        elif op == "heartbeat":
+            pass  # last_beat already refreshed
+        elif op == "resize":
+            if lease is not None:
+                with self._lock:
+                    lease.share = max(0.0, float(msg.get("share", lease.share)))
+                    if "slots" in msg:
+                        lease.want = max(1, int(msg["slots"]))
+                    self._regrant()
+        elif op == "rescale":
+            # the MeshRescaleEvent routing: multiply the node share by the
+            # surviving-device fraction (cross-process reclaim/regrowth)
+            if lease is not None:
+                with self._lock:
+                    lease.share = max(0.0, lease.share * float(msg["scale"]))
+                    self._regrant()
+        elif op == "deregister":
+            self._drop(conn, cell, reclaim=True)
+        elif op == "stats":
+            try:
+                send_msg(conn, {"op": "snapshot", **self.snapshot()})
+            except OSError:
+                self._drop(conn, cell, reclaim=True)
+        # unknown ops are ignored (forward compatibility)
+
+    def _drop(self, conn: socket.socket, cell: list, *, reclaim: bool) -> None:
+        lease: Optional[ProcLease] = cell[0]
+        try:
+            self._sel.unregister(conn)
+        except (KeyError, ValueError):
+            pass
+        try:
+            conn.close()
+        except OSError:
+            pass
+        if lease is None:
+            return
+        cell[0] = None
+        with self._lock:
+            if lease.wid in self._table:
+                self._table.pop(lease.wid)
+                if reclaim:
+                    self.reclaims += 1
+                self._regrant()
+
+    def _flush_dead(self) -> None:
+        """Drop connections whose grant push failed (deferred from
+        ``_regrant``, which runs under the table lock)."""
+        while self._dead_conns:
+            conn = self._dead_conns.pop()
+            try:
+                key = self._sel.get_key(conn)
+            except (KeyError, ValueError):
+                continue  # already dropped (EOF raced the failed push)
+            self._drop(conn, key.data, reclaim=True)
+
+    def _reap_stale(self) -> None:
+        """Heartbeat liveness: reclaim leases of silent workers (wedged
+        process, or a kill the socket layer has not surfaced yet)."""
+        deadline = time.monotonic() - self.heartbeat_timeout
+        stale = [l for l in self._table.values() if l.last_beat < deadline]
+        for lease in stale:
+            key = None
+            try:
+                key = self._sel.get_key(lease.conn)
+            except (KeyError, ValueError):
+                pass
+            if key is not None:
+                self._drop(lease.conn, key.data, reclaim=True)
+            else:  # connection already gone: just reclaim the lease
+                with self._lock:
+                    if lease.wid in self._table:
+                        self._table.pop(lease.wid)
+                        self.reclaims += 1
+                        self._regrant()
+
+    # ------------------------------------------------------------------ #
+    # apportionment (the LeaseTable consumer — caller holds self._lock)
+    # ------------------------------------------------------------------ #
+    def _regrant(self) -> None:
+        """Recompute every worker's grant and push the changes.
+
+        Quotas come from the shared largest-remainder apportionment;
+        capacity a worker cannot use (``want < quota``) is redistributed
+        one slot at a time in the shared I5 borrow order — a worker only
+        exceeds its quota after every under-quota worker's demand is met,
+        the node-level grant rule."""
+        self._table.recompute()
+        entries = list(self._table.values())
+        for e in entries:
+            e.granted = min(e.quota, e.want)
+            e.in_use = e.granted
+        pool = self.capacity - sum(e.granted for e in entries)
+        while pool > 0:
+            hungry = [e for e in entries if e.want > e.granted]
+            if not hungry:
+                break
+            e = borrow_order(hungry)[0]
+            e.granted += 1
+            e.in_use = e.granted
+            pool -= 1
+        self._epoch += 1
+        for e in entries:
+            try:
+                send_msg(e.conn, {
+                    "op": "grant",
+                    "slots": e.granted,
+                    "quota": e.quota,
+                    "capacity": self.capacity,
+                    "workers": len(entries),
+                    "epoch": self._epoch,
+                })
+            except OSError:
+                # a client not draining its socket (wedged) or already
+                # gone: grants are tiny, so a full buffer means hundreds
+                # of unread pushes — and a partial frame has corrupted
+                # the stream anyway. Schedule the drop; the serve loop
+                # performs it outside this lock.
+                self._dead_conns.append(e.conn)
+
+    # ------------------------------------------------------------------ #
+    # introspection
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "capacity": self.capacity,
+                "epoch": self._epoch,
+                "registrations": self.registrations,
+                "reclaims": self.reclaims,
+                "workers": self._worker_rows(),
+            }
+
+    def _worker_rows(self) -> dict:
+        """Per-worker rows keyed by name — disambiguated with the unique
+        wid on collision (e.g. several clients left at the default name),
+        so no lease silently vanishes from the snapshot."""
+        rows: dict = {}
+        for l in self._table.values():
+            key = l.name if l.name not in rows else f"{l.name}#{l.wid}"
+            rows[key] = {
+                "wid": l.wid,
+                "pid": l.pid,
+                "share": l.share,
+                "quota": l.quota,
+                "granted": l.granted,
+                "want": l.want,
+            }
+        return rows
+
+
+def main(argv=None) -> int:
+    """Standalone node broker: ``python -m repro.ipc.broker``."""
+    ap = argparse.ArgumentParser(description="USF node-level lease broker")
+    ap.add_argument("--path", default=None,
+                    help="Unix socket path (default: per-user tmp path)")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="node slots to apportion (default: cpu count)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=1.0)
+    args = ap.parse_args(argv)
+    broker = NodeBroker(args.path, capacity=args.capacity,
+                        heartbeat_timeout=args.heartbeat_timeout)
+    print(f"usf-node-broker: serving {broker.capacity} slots on "
+          f"{broker.path}", flush=True)
+    try:
+        broker.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        broker.stop()
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(main())

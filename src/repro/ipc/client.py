@@ -1,0 +1,233 @@
+"""BrokerClient — a worker process's side of the node-level lease broker.
+
+Connects a process (typically one ``UsfRuntime``) to the ``NodeBroker``:
+registers a share-weighted node lease, heartbeats for liveness, and
+applies pushed grants. ``bind(runtime)`` wires grants straight into
+elastic slot parking — a broker *revoke* shrinks the runtime's effective
+width at its tasks' next scheduling points (within one tick period for
+preemptive policies), a *grant* unparks and refills immediately.
+
+Failure semantics (the paper's pure-user-space stance: coordination is an
+optimization, never a liveness dependency):
+
+* if the broker dies mid-run, the client detects it (EOF or send failure)
+  and **degrades to free-running**: the bound runtime's width is restored
+  to its full topology and the process continues uncoordinated — it never
+  hangs on a dead coordinator;
+* grants are floored at one slot when applied to a runtime, so a miserly
+  apportionment can throttle a process but never starve it.
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import threading
+from typing import Callable, Optional
+
+from repro.ipc.protocol import ProtocolError, recv_msg, send_msg
+
+
+class BrokerClient:
+    """One process's node-lease handle.
+
+    Parameters
+    ----------
+    path:                the broker's Unix socket path.
+    name:                worker name (diagnostics; broker snapshots).
+    share:               node-lease share weight (default 1.0).
+    slots:               demand — how many node slots this process can use
+                         (default: the bound runtime's topology width, or 1).
+    heartbeat_interval:  seconds between heartbeats (keep well under the
+                         broker's ``heartbeat_timeout``).
+    on_grant:            callback ``(slots:int) -> None`` for pushed grants.
+    on_disconnect:       callback ``() -> None`` when the broker is lost.
+    """
+
+    def __init__(self, path: str, *, name: str = "worker",
+                 share: float = 1.0, slots: Optional[int] = None,
+                 heartbeat_interval: float = 0.2,
+                 on_grant: Optional[Callable[[int], None]] = None,
+                 on_disconnect: Optional[Callable[[], None]] = None):
+        self.path = path
+        self.name = name
+        self.share = float(share)
+        self.slots = slots
+        self.heartbeat_interval = float(heartbeat_interval)
+        self.on_grant = on_grant
+        self.on_disconnect = on_disconnect
+        self._runtime = None
+        self._sock: Optional[socket.socket] = None
+        self._send_lock = threading.Lock()
+        self._recv_thread: Optional[threading.Thread] = None
+        self._beat_thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self._first_grant = threading.Event()
+        self._degrade_once = threading.Lock()
+        #: the last pushed grant (node slots), None before the first one
+        self.granted: Optional[int] = None
+        self.grant_epoch = 0
+        #: True once the broker was lost and this worker fell back to
+        #: free-running (full local width, no coordination)
+        self.degraded = False
+        self.connected = False
+
+    # ------------------------------------------------------------------ #
+    # wiring
+    # ------------------------------------------------------------------ #
+    def bind(self, runtime) -> "BrokerClient":
+        """Wire grants into ``runtime`` (``UsfRuntime`` or ``SimExecutor`` —
+        anything with ``set_slot_target``/``topology``): a pushed grant of
+        ``n`` caps the runtime at ``max(1, n)`` slots; losing the broker
+        restores the full topology (free-running degrade). Call before
+        ``start()``."""
+        self._runtime = runtime
+        if self.slots is None:
+            self.slots = runtime.topology.n_slots
+        return self
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    def start(self, *, connect_timeout: float = 5.0) -> "BrokerClient":
+        """Connect, register, and start the receiver/heartbeat threads."""
+        if self._sock is not None:
+            raise RuntimeError("client already started")
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(connect_timeout)
+        sock.connect(self.path)
+        sock.settimeout(None)
+        self._sock = sock
+        self.connected = True
+        self._send({
+            "op": "register",
+            "name": self.name,
+            "share": self.share,
+            "slots": int(self.slots or 1),
+            "pid": os.getpid(),
+        })
+        self._recv_thread = threading.Thread(
+            target=self._recv_main, name=f"usf-broker-recv-{self.name}",
+            daemon=True)
+        self._recv_thread.start()
+        self._beat_thread = threading.Thread(
+            target=self._beat_main, name=f"usf-broker-beat-{self.name}",
+            daemon=True)
+        self._beat_thread.start()
+        return self
+
+    def stop(self, *, deregister: bool = True, timeout: float = 5.0) -> None:
+        """Leave the broker cleanly (its lease is reclaimed for siblings)."""
+        self._stop_evt.set()
+        if deregister and self.connected:
+            try:
+                self._send({"op": "deregister"})
+            except OSError:
+                pass
+        sock = self._sock
+        if sock is not None:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        for t in (self._recv_thread, self._beat_thread):
+            if t is not None and t is not threading.current_thread():
+                t.join(timeout)
+        self.connected = False
+
+    # ------------------------------------------------------------------ #
+    # lease ops (cross-process twins of SlotLease.resize / apply_rescale)
+    # ------------------------------------------------------------------ #
+    def resize(self, share: float) -> None:
+        """Set this process's node share (elastic cross-process lease)."""
+        self.share = float(share)
+        self._send({"op": "resize", "share": self.share})
+
+    def rescale(self, scale: float) -> None:
+        """Multiply this process's node share by ``scale`` — the
+        ``MeshRescaleEvent`` routing: a process that lost half its devices
+        surrenders half its node-slot share to co-located processes."""
+        self.share *= float(scale)
+        self._send({"op": "rescale", "scale": float(scale)})
+
+    def wait_grant(self, timeout: Optional[float] = None) -> Optional[int]:
+        """Block until the first grant is pushed; returns it (or None on
+        timeout / after a degrade)."""
+        self._first_grant.wait(timeout)
+        return self.granted
+
+    # ------------------------------------------------------------------ #
+    # internals
+    # ------------------------------------------------------------------ #
+    def _send(self, msg: dict) -> None:
+        sock = self._sock
+        if sock is None:
+            raise OSError("not connected")
+        try:
+            with self._send_lock:
+                send_msg(sock, msg)
+        except OSError:
+            # an intentional stop() must not masquerade as a broker loss:
+            # no degrade flag, no on_disconnect, no width restore on a
+            # runtime that is being torn down anyway
+            if not self._stop_evt.is_set():
+                self._degrade()
+            raise
+
+    def _recv_main(self) -> None:
+        sock = self._sock
+        while not self._stop_evt.is_set():
+            try:
+                msg = recv_msg(sock)
+            except (OSError, ProtocolError, ValueError):
+                msg = None
+            if msg is None:  # broker gone (EOF) or socket error
+                if not self._stop_evt.is_set():
+                    self._degrade()
+                return
+            if msg.get("op") == "grant":
+                self.granted = int(msg["slots"])
+                self.grant_epoch = int(msg.get("epoch", self.grant_epoch + 1))
+                self._apply_grant(self.granted)
+                self._first_grant.set()
+
+    def _beat_main(self) -> None:
+        while not self._stop_evt.wait(self.heartbeat_interval):
+            try:
+                self._send({"op": "heartbeat"})
+            except OSError:
+                return  # _send already degraded us
+
+    def _apply_grant(self, slots: int) -> None:
+        if self._runtime is not None:
+            # liveness floor: a zero grant throttles to one slot, never to
+            # a dead stop (the runtime applies the same floor)
+            self._runtime.set_slot_target(max(1, slots))
+        if self.on_grant is not None:
+            self.on_grant(slots)
+
+    def _degrade(self) -> None:
+        """Broker lost: fall back to free-running exactly once."""
+        if not self._degrade_once.acquire(blocking=False):
+            return
+        self.degraded = True
+        self.connected = False
+        self._stop_evt.set()
+        self._first_grant.set()  # unblock wait_grant callers
+        if self._runtime is not None:
+            try:
+                self._runtime.set_slot_target(None)  # full width again
+            except Exception:  # pragma: no cover - runtime already down
+                pass
+        if self.on_disconnect is not None:
+            self.on_disconnect()
+
+    def __enter__(self) -> "BrokerClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import TYPE_CHECKING, Iterable
+from typing import TYPE_CHECKING, Iterable, Optional
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.arbiter import SlotLease
@@ -69,21 +69,42 @@ class ElasticCoordinator:
     ``demote(job)``) enables ``demote_on_collapse`` registrations: a job
     whose mesh shrinks to zero devices is *live-demoted* into the shared
     default group instead of being left holding a dedicated zero-share
-    lease — the rescale-driven policy swap without drain. The demoted
-    job leaves elastic tracking (its dedicated lease is gone); re-promote
-    it with a fresh ``attach`` + ``register`` once its mesh regrows.
+    lease — the rescale-driven policy swap without drain. With a
+    ``policy_factory`` the round-trip closes automatically: the demoted
+    job is **re-promoted** — a fresh dedicated lease under a fresh policy
+    instance from the factory — on the first event that regrows its mesh
+    to more than zero devices, at a share scaled by the regrown fraction.
+    Without a factory the demoted job leaves elastic tracking (the PR 4
+    behaviour); re-promote it manually with ``attach`` + ``register``.
+
+    ``broker`` (a ``repro.ipc.BrokerClient``, or anything exposing
+    ``rescale(scale)``) routes every event to the *node-level* lease too:
+    the process that lost half its devices also surrenders half its node
+    slot share to co-located sibling processes — cross-process reclaim
+    riding the same event stream as the in-process leases.
     """
 
-    def __init__(self, runtime=None) -> None:
+    def __init__(self, runtime=None, broker=None) -> None:
         self._runtime = runtime
+        self._broker = broker
         self._leases: list["SlotLease"] = []
         #: opt-in keyed by LEASE identity, not jid: a stale registration's
         #: flag must die with it, never eclipsing (or erasing) the flag of
         #: a newer live registration for the same job
         self._demote_on_collapse: set["SlotLease"] = set()
+        #: lease -> zero-arg Policy factory for auto re-promotion
+        self._policy_factories: dict[int, object] = {}  # id(lease) -> factory
+        #: jid -> (job, factory, share-at-collapse, devices-at-collapse):
+        #: jobs demoted by a collapse, waiting for their mesh to regrow
+        self._collapsed: dict[int, tuple] = {}
+        #: (node share, devices) before a collapse zeroed the broker
+        #: lease — a multiplicative rescale cannot recover from 0, so the
+        #: regrow restores the share absolutely via ``broker.resize``
+        self._broker_collapsed: Optional[tuple] = None
 
     def register(self, lease: "SlotLease", *,
-                 demote_on_collapse: bool = False) -> "SlotLease":
+                 demote_on_collapse: bool = False,
+                 policy_factory=None) -> "SlotLease":
         if demote_on_collapse and self._runtime is None:
             raise ValueError(
                 "demote_on_collapse needs a runtime exposing demote(job); "
@@ -94,14 +115,24 @@ class ElasticCoordinator:
                 f"demote_on_collapse needs a dedicated lease; {lease.job} "
                 "already runs in the default group (nothing to demote)"
             )
+        if policy_factory is not None and not demote_on_collapse:
+            raise ValueError(
+                "policy_factory only makes sense with demote_on_collapse "
+                "(it rebuilds the dedicated policy at re-promotion)"
+            )
         if lease not in self._leases:  # re-register only updates the flag:
             self._leases.append(lease)  # a duplicate would resize twice
         if demote_on_collapse:
             self._demote_on_collapse.add(lease)
+            if policy_factory is not None:
+                self._policy_factories[id(lease)] = policy_factory
+            else:
+                self._policy_factories.pop(id(lease), None)
         else:
             # re-registering the same lease without the flag revokes its
             # opt-in; a FRESH lease simply never carries the old one's
             self._demote_on_collapse.discard(lease)
+            self._policy_factories.pop(id(lease), None)
         return lease
 
     def leases(self) -> Iterable["SlotLease"]:
@@ -110,10 +141,22 @@ class ElasticCoordinator:
     def on_rescale(self, event: MeshRescaleEvent) -> dict[str, float]:
         """Apply the event to every registered lease; returns the new
         shares keyed by job name (0.0 for a job demoted on collapse —
-        its dedicated share is released wholesale)."""
+        its dedicated share is released wholesale). Regrowth events
+        (new_devices > 0) first re-promote any collapse-demoted job that
+        registered a ``policy_factory``; the event is also routed to the
+        node-level broker lease when one is wired in."""
         shares: dict[str, float] = {}
+        fresh: list["SlotLease"] = []
+        if event.new_devices > 0 and self._collapsed:
+            repromoted, fresh = self._repromote(event)
+            shares.update(repromoted)
         survivors: list["SlotLease"] = []
         for lease in self._leases:
+            if any(lease is f for f in fresh):
+                # re-promoted by THIS event: its share already reflects the
+                # regrown mesh — applying the event again would square it
+                survivors.append(lease)
+                continue
             if lease.job.lease is not lease:
                 # superseded out-of-band (a live swap/demote/detach the
                 # coordinator did not perform): the registration is dead —
@@ -121,14 +164,74 @@ class ElasticCoordinator:
                 # no quota reads; the job's new lease needs a fresh
                 # register()
                 self._demote_on_collapse.discard(lease)
+                self._policy_factories.pop(id(lease), None)
                 continue
             if (event.new_devices == 0
                     and lease in self._demote_on_collapse):
+                factory = self._policy_factories.pop(id(lease), None)
+                pre_share = lease.share
                 self._runtime.demote(lease.job)
                 self._demote_on_collapse.discard(lease)
                 shares[lease.job.name] = 0.0
+                if factory is not None:
+                    # remember enough to re-promote when the mesh regrows:
+                    # the share scales by regrown/pre-collapse devices
+                    self._collapsed[lease.job.jid] = (
+                        lease.job, factory, pre_share, event.old_devices)
                 continue  # the dedicated lease is dead: stop tracking it
+            if event.old_devices == 0:
+                # a regrow-from-nothing defines no ratio for jobs that
+                # were never collapsed: their shares are left untouched
+                # (the event only feeds the re-promotion pass above)
+                shares[lease.job.name] = lease.share
+                survivors.append(lease)
+                continue
             shares[lease.job.name] = apply_rescale(lease, event)
             survivors.append(lease)
         self._leases = survivors
+        if self._broker is not None:
+            # cross-process reclaim: the node-level share tracks the same
+            # device fraction the in-process leases just applied
+            if event.new_devices == 0 and event.old_devices > 0:
+                # collapse: remember the pre-zero node share — 0 times
+                # any later scale stays 0, so the regrow must restore
+                # absolutely, not multiplicatively
+                self._broker_collapsed = (self._broker.share,
+                                          event.old_devices)
+                self._broker.rescale(0.0)
+            elif event.old_devices == 0:
+                if self._broker_collapsed is not None:
+                    share0, dev0 = self._broker_collapsed
+                    self._broker_collapsed = None
+                    self._broker.resize(
+                        share0 * event.new_devices / dev0)
+            else:
+                self._broker.rescale(event.scale)
         return shares
+
+    def _repromote(self, event: MeshRescaleEvent
+                   ) -> tuple[dict[str, float], list]:
+        """Close the collapse round-trip: re-attach every recorded
+        collapse-demoted job under a fresh dedicated policy, at the
+        pre-collapse share scaled by the regrown device fraction, and
+        re-register it (flag and factory intact) so later events keep
+        tracking it."""
+        shares: dict[str, float] = {}
+        fresh: list["SlotLease"] = []
+        for jid, (job, factory, pre_share, pre_devices) in list(
+                self._collapsed.items()):
+            del self._collapsed[jid]
+            cur = job.lease
+            if cur is not None and cur.group.dedicated:
+                # re-promoted out-of-band (a manual attach): leave the
+                # manual registration — if any — in charge
+                continue
+            new_share = pre_share * (event.new_devices / pre_devices
+                                     if pre_devices > 0 else 1.0)
+            lease = self._runtime.attach(job, policy=factory(),
+                                         share=new_share)
+            self.register(lease, demote_on_collapse=True,
+                          policy_factory=factory)
+            shares[job.name] = new_share
+            fresh.append(lease)
+        return shares, fresh

@@ -1,0 +1,260 @@
+"""Multi-process serving — N server *processes* behind one gateway.
+
+The single-process engine (``repro.serve.engine``) co-locates servers as
+jobs inside one ``UsfRuntime``; this module is the paper's full
+*multi-process* story: each model server runs in its own OS process with
+its own runtime, and the processes share the node's cores through the
+node-level lease broker (``repro.ipc``) instead of blind OS-level
+oversubscription:
+
+    gateway process: MultiProcessGateway ── NodeBroker (thread)
+        ├── ServerProcess A: UsfRuntime + BrokerClient + InferenceServer
+        ├── ServerProcess B: …
+        └── ServerProcess C: …
+
+Request fan-out/fan-in crosses process boundaries over multiprocessing
+queues; *slot* coordination crosses them over the broker's Unix socket.
+Each server registers a nice-derived (or explicit) node share, so the
+paper's gateway-nice-0 / servers-nice-20 priority story scales from jobs
+to processes unchanged. A server killed mid-flight is reclaimed by the
+broker (its node slots flow to the survivors) and surfaced to the caller
+as a ``ServerProcessError`` instead of a hang; a dead broker degrades
+every server to free-running.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import queue as queue_mod
+import time
+from typing import Any, Optional
+
+from repro.ipc import BrokerClient, NodeBroker
+
+#: spawn, not fork: server children initialize their own JAX runtime (a
+#: forked interpreter would inherit locked XLA state and watchdog threads)
+_CTX = mp.get_context("spawn")
+
+
+class ServerProcessError(RuntimeError):
+    pass
+
+
+def _server_main(spec: dict, req_q, resp_q) -> None:
+    """Child entry: one InferenceServer on its own broker-bound runtime."""
+    try:
+        from repro.configs.base import get_arch, get_smoke
+        from repro.core.policies import SchedCoop
+        from repro.core.threads import UsfRuntime
+        from repro.core.topology import Topology
+        from repro.serve.engine import InferenceServer, Request
+
+        usf = UsfRuntime(Topology(int(spec["slots"]), 1), SchedCoop())
+        client = None
+        if spec.get("broker_path"):
+            share = spec.get("share")
+            client = BrokerClient(
+                spec["broker_path"],
+                name=spec["name"],
+                # explicit 0.0 is a valid (best-effort) share: only an
+                # unset share defaults to 1.0
+                share=1.0 if share is None else share,
+                heartbeat_interval=spec.get("heartbeat_interval", 0.2),
+            ).bind(usf).start()
+            client.wait_grant(5.0)  # coordinated before the first decode
+        cfg = (get_smoke(spec["arch"]) if spec.get("smoke", True)
+               else get_arch(spec["arch"]))
+        server = InferenceServer(
+            spec["name"], cfg, usf,
+            max_batch=int(spec.get("max_batch", 2)),
+            max_len=int(spec.get("max_len", 32)),
+            nice=int(spec.get("nice", 0)),
+            share=spec.get("job_share"),
+        )
+        server.start()
+        resp_q.put({"ready": True, "pid": os.getpid()})
+        while True:
+            item = req_q.get()
+            if item is None:
+                break
+            rid, tokens, max_new = item
+            req = server.submit(Request(tokens=list(tokens),
+                                        max_new=int(max_new)))
+            # the pump is a plain-thread waiter on the CoopEvent (mixed
+            # waiters are supported); the decode loop runs gated
+            req.done.wait()
+            resp_q.put({
+                "rid": rid,
+                "output": list(req.output),
+                "latency": req.latency,
+                "granted": None if client is None else client.granted,
+            })
+        server.stop()
+        if client is not None:
+            client.stop()
+        usf.shutdown(timeout=5.0)
+    except Exception:  # noqa: BLE001 - surface to the parent, then die
+        import traceback
+
+        resp_q.put({"fatal": traceback.format_exc()})
+        raise
+
+
+class ServerProcess:
+    """Parent-side handle of one model-server process."""
+
+    def __init__(self, name: str, arch: str, *,
+                 broker_path: Optional[str] = None,
+                 slots: int = 2, share: Optional[float] = None,
+                 nice: int = 0, max_batch: int = 2, max_len: int = 32,
+                 smoke: bool = True, heartbeat_interval: float = 0.2):
+        self.name = name
+        self.spec = {
+            "name": name,
+            "arch": arch,
+            "broker_path": broker_path,
+            "slots": slots,
+            "share": share,
+            "job_share": None,
+            "nice": nice,
+            "max_batch": max_batch,
+            "max_len": max_len,
+            "smoke": smoke,
+            "heartbeat_interval": heartbeat_interval,
+        }
+        self._req_q = _CTX.Queue()
+        self._resp_q = _CTX.Queue()
+        self._proc: Optional[Any] = None
+        self._rid = 0
+        self.served = 0
+
+    def start(self, *, ready_timeout: float = 180.0) -> "ServerProcess":
+        self._proc = _CTX.Process(
+            target=_server_main,
+            args=(self.spec, self._req_q, self._resp_q),
+            name=f"usf-server-{self.name}", daemon=True)
+        self._proc.start()
+        msg = self._next_resp(ready_timeout)
+        if not msg.get("ready"):
+            raise ServerProcessError(f"{self.name} failed to start: {msg}")
+        return self
+
+    @property
+    def pid(self) -> Optional[int]:
+        return None if self._proc is None else self._proc.pid
+
+    def alive(self) -> bool:
+        return self._proc is not None and self._proc.is_alive()
+
+    def submit(self, tokens, max_new: int = 4) -> int:
+        """Queue one request; returns its rid (responses arrive FIFO)."""
+        self._rid += 1
+        self._req_q.put((self._rid, list(tokens), max_new))
+        return self._rid
+
+    def result(self, timeout: Optional[float] = None) -> dict:
+        """Next response (FIFO — the server pump is serial)."""
+        msg = self._next_resp(timeout)
+        self.served += 1
+        return msg
+
+    def _next_resp(self, timeout: Optional[float]) -> dict:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            step = 0.5 if deadline is None else max(
+                0.0, min(0.5, deadline - time.monotonic()))
+            try:
+                msg = self._resp_q.get(timeout=step)
+            except queue_mod.Empty:
+                if not self.alive():
+                    raise ServerProcessError(
+                        f"server process {self.name} (pid={self.pid}) died")
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"no response from {self.name} within {timeout}s")
+                continue
+            if "fatal" in msg:
+                raise ServerProcessError(
+                    f"{self.name} crashed:\n{msg['fatal']}")
+            return msg
+
+    def stop(self, timeout: float = 10.0) -> None:
+        if self._proc is None:
+            return
+        try:
+            self._req_q.put(None)
+        except (OSError, ValueError):
+            pass
+        self._proc.join(timeout)
+        if self._proc.is_alive():
+            self._proc.terminate()
+            self._proc.join(5.0)
+
+
+class MultiProcessGateway:
+    """Fans each request out to every server process and joins the
+    responses (the cross-process twin of ``serve.engine.Gateway``).
+
+    With ``coordinate=True`` (default) the gateway hosts the designated
+    ``NodeBroker`` thread and every server process registers with it —
+    the co-located servers split the node by share instead of
+    oversubscribing it. ``coordinate=False`` is the free-running Linux
+    baseline: same processes, no slot coordination.
+    """
+
+    def __init__(self, archs: dict[str, str], *, coordinate: bool = True,
+                 node_capacity: Optional[int] = None,
+                 slots_per_server: int = 2, shares: Optional[dict] = None,
+                 max_batch: int = 2, max_len: int = 32, smoke: bool = True,
+                 heartbeat_timeout: float = 1.0):
+        self.broker: Optional[NodeBroker] = None
+        broker_path = None
+        if coordinate:
+            self.broker = NodeBroker(capacity=node_capacity,
+                                     heartbeat_timeout=heartbeat_timeout)
+            broker_path = self.broker.start()
+        shares = shares or {}
+        self.servers = [
+            ServerProcess(name, arch, broker_path=broker_path,
+                          slots=slots_per_server, share=shares.get(name),
+                          max_batch=max_batch, max_len=max_len, smoke=smoke)
+            for name, arch in archs.items()
+        ]
+        self.responses: list[dict] = []
+
+    def start(self, *, ready_timeout: float = 180.0) -> "MultiProcessGateway":
+        for s in self.servers:
+            s.start(ready_timeout=ready_timeout)
+        return self
+
+    def handle(self, tokens, max_new: int = 4,
+               timeout: Optional[float] = None) -> dict:
+        """Submit to every server process, wait for all responses."""
+        t0 = time.monotonic()
+        for s in self.servers:
+            s.submit(tokens, max_new)
+        per_server = {}
+        for s in self.servers:
+            left = None if timeout is None else max(
+                0.0, timeout - (time.monotonic() - t0))
+            per_server[s.name] = s.result(timeout=left)
+        rec = {
+            "latency": time.monotonic() - t0,
+            "per_server": {n: r["latency"] for n, r in per_server.items()},
+            "outputs": {n: r["output"] for n, r in per_server.items()},
+        }
+        self.responses.append(rec)
+        return rec
+
+    def stop(self) -> None:
+        for s in self.servers:
+            s.stop()
+        if self.broker is not None:
+            self.broker.stop()
+
+    def __enter__(self) -> "MultiProcessGateway":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

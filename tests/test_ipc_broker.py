@@ -1,0 +1,439 @@
+"""Cross-process coordination (repro.ipc): the node-level lease broker.
+
+Covers the lease lifecycle (register / grant / resize / rescale /
+deregister), the work-conserving node apportionment, and — critically —
+the fault paths the paper's pure-user-space stance demands:
+
+* a worker process killed mid-lease is reclaimed (socket EOF immediately,
+  heartbeat timeout for wedged-but-connected workers) and its slots flow
+  to the survivors;
+* a broker killed mid-run degrades every worker to free-running — full
+  local width, no hang, no deadlock.
+"""
+
+import multiprocessing as mp
+import os
+import socket
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.core.policies import SchedCoop
+from repro.core.task import Job
+from repro.core.threads import UsfRuntime
+from repro.core.topology import Topology
+from repro.ipc import BrokerClient, NodeBroker
+from repro.ipc.protocol import recv_msg, send_msg
+
+_CTX = mp.get_context("spawn")
+
+
+def _path() -> str:
+    return os.path.join(tempfile.mkdtemp(prefix="usf-ipc-"), "broker.sock")
+
+
+def _wait_until(cond, timeout=5.0, step=0.01):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(step)
+    return cond()
+
+
+@pytest.fixture
+def broker():
+    b = NodeBroker(_path(), capacity=4, heartbeat_timeout=0.6)
+    b.start()
+    yield b
+    b.stop()
+
+
+# --------------------------------------------------------------------- #
+# lease lifecycle & apportionment
+# --------------------------------------------------------------------- #
+def test_single_worker_gets_whole_node(broker):
+    c = BrokerClient(broker.path, name="w0", share=1.0, slots=4,
+                     heartbeat_interval=0.1).start()
+    try:
+        assert c.wait_grant(5.0) == 4  # work-conserving: nobody else wants
+    finally:
+        c.stop()
+
+
+def test_two_workers_split_by_share(broker):
+    c1 = BrokerClient(broker.path, name="w1", share=1.0, slots=4,
+                      heartbeat_interval=0.1).start()
+    c2 = BrokerClient(broker.path, name="w2", share=3.0, slots=4,
+                      heartbeat_interval=0.1).start()
+    try:
+        assert c1.wait_grant(5.0) is not None
+        assert _wait_until(lambda: c1.granted == 1 and c2.granted == 3)
+        snap = broker.snapshot()
+        assert snap["workers"]["w1"]["quota"] == 1
+        assert snap["workers"]["w2"]["quota"] == 3
+    finally:
+        c1.stop()
+        c2.stop()
+
+
+def test_grant_capped_at_demand_and_redistributed(broker):
+    # w1 can only use 1 slot: its spare quota flows to w2 (I5 borrow
+    # order at node scope — work-conserving, no slot idles)
+    c1 = BrokerClient(broker.path, name="w1", share=1.0, slots=1,
+                      heartbeat_interval=0.1).start()
+    c2 = BrokerClient(broker.path, name="w2", share=1.0, slots=4,
+                      heartbeat_interval=0.1).start()
+    try:
+        assert _wait_until(lambda: c1.granted == 1 and c2.granted == 3)
+    finally:
+        c1.stop()
+        c2.stop()
+
+
+def test_resize_and_rescale_reapportion(broker):
+    c1 = BrokerClient(broker.path, name="w1", share=1.0, slots=4,
+                      heartbeat_interval=0.1).start()
+    c2 = BrokerClient(broker.path, name="w2", share=1.0, slots=4,
+                      heartbeat_interval=0.1).start()
+    try:
+        assert _wait_until(lambda: c1.granted == 2 and c2.granted == 2)
+        c1.resize(3.0)  # the cross-process lease.resize
+        assert _wait_until(lambda: c1.granted == 3 and c2.granted == 1)
+        c1.rescale(1 / 3)  # the MeshRescaleEvent routing: back to 1.0
+        assert _wait_until(lambda: c1.granted == 2 and c2.granted == 2)
+        assert c1.share == pytest.approx(1.0)
+    finally:
+        c1.stop()
+        c2.stop()
+
+
+def test_deregister_returns_capacity_to_survivors(broker):
+    c1 = BrokerClient(broker.path, name="w1", share=1.0, slots=4,
+                      heartbeat_interval=0.1).start()
+    c2 = BrokerClient(broker.path, name="w2", share=1.0, slots=4,
+                      heartbeat_interval=0.1).start()
+    assert _wait_until(lambda: c1.granted == 2 and c2.granted == 2)
+    c2.stop()  # clean deregister
+    try:
+        assert _wait_until(lambda: c1.granted == 4)
+        assert _wait_until(lambda: len(broker.snapshot()["workers"]) == 1)
+    finally:
+        c1.stop()
+
+
+def test_grants_drive_bound_runtime_width(broker):
+    """End-to-end: a pushed grant lands on elastic slot parking."""
+    rt1 = UsfRuntime(Topology(4, 1), SchedCoop())
+    rt2 = UsfRuntime(Topology(4, 1), SchedCoop())
+    c1 = BrokerClient(broker.path, name="w1",
+                      heartbeat_interval=0.1).bind(rt1).start()
+    c2 = None
+    try:
+        assert c1.wait_grant(5.0) == 4
+        assert rt1.sched.slot_target() == 4
+        c2 = BrokerClient(broker.path, name="w2",
+                          heartbeat_interval=0.1).bind(rt2).start()
+        assert _wait_until(lambda: rt1.sched.slot_target() == 2
+                           and rt2.sched.slot_target() == 2)
+        # gated work respects the brokered width
+        lock = threading.Lock()
+        state = {"cur": 0, "max": 0}
+        job = Job("j")
+
+        def body():
+            for _ in range(4):
+                with lock:
+                    state["cur"] += 1
+                    state["max"] = max(state["max"], state["cur"])
+                time.sleep(0.002)
+                with lock:
+                    state["cur"] -= 1
+                rt1.yield_now()
+
+        tasks = [rt1.create(body, job=job) for _ in range(6)]
+        for t in tasks:
+            assert rt1.join(t, timeout=30.0)
+        assert state["max"] <= 2
+    finally:
+        c1.stop()
+        if c2 is not None:
+            c2.stop()
+        rt1.shutdown(timeout=5.0)
+        rt2.shutdown(timeout=5.0)
+
+
+def test_zero_grant_floors_at_one_slot(broker):
+    """A starved apportionment (capacity < workers) still leaves every
+    bound runtime one slot — throttled, never deadlocked."""
+    rts = [UsfRuntime(Topology(2, 1), SchedCoop()) for _ in range(6)]
+    clients = []
+    try:
+        for i, rt in enumerate(rts):
+            clients.append(BrokerClient(
+                broker.path, name=f"w{i}",
+                heartbeat_interval=0.1).bind(rt).start())
+        assert _wait_until(
+            lambda: all(c.granted is not None for c in clients))
+        # 4 slots over 6 workers: someone holds a zero grant...
+        assert _wait_until(
+            lambda: sum(c.granted for c in clients) == 4)
+        # ...but every runtime keeps at least one active slot
+        for rt in rts:
+            assert rt.sched.slot_target() >= 1
+        job = Job("alive")
+        done = []
+        for rt in rts:
+            t = rt.create(lambda: done.append(1), job=job)
+            assert rt.join(t, timeout=30.0)
+        assert len(done) == len(rts)
+    finally:
+        for c in clients:
+            c.stop()
+        for rt in rts:
+            rt.shutdown(timeout=5.0)
+
+
+# --------------------------------------------------------------------- #
+# fault path 1: worker dies mid-lease
+# --------------------------------------------------------------------- #
+def _victim_main(path: str, ready) -> None:
+    """A worker process that registers and then parks forever (until
+    killed): the broker must reclaim it."""
+    client = BrokerClient(path, name="victim", share=1.0, slots=4,
+                          heartbeat_interval=0.1).start()
+    client.wait_grant(5.0)
+    ready.set()
+    time.sleep(600.0)
+
+
+def test_worker_killed_mid_lease_is_reclaimed(broker):
+    survivor = BrokerClient(broker.path, name="survivor", share=1.0,
+                            slots=4, heartbeat_interval=0.1).start()
+    try:
+        assert survivor.wait_grant(5.0) == 4
+        ready = _CTX.Event()
+        victim = _CTX.Process(target=_victim_main,
+                              args=(broker.path, ready), daemon=True)
+        victim.start()
+        assert ready.wait(30.0)
+        assert _wait_until(lambda: survivor.granted == 2)
+        assert len(broker.snapshot()["workers"]) == 2
+
+        victim.kill()  # SIGKILL: no deregister, no goodbye
+        victim.join(10.0)
+        # reclaim is EOF-driven (faster than the heartbeat timeout): the
+        # victim's lease is gone and its slots flow back to the survivor
+        assert _wait_until(lambda: survivor.granted == 4, timeout=3.0)
+        snap = broker.snapshot()
+        assert list(snap["workers"]) == ["survivor"]
+        assert snap["reclaims"] >= 1
+    finally:
+        survivor.stop()
+
+
+def test_wedged_worker_reclaimed_by_heartbeat_timeout(broker):
+    """A worker whose socket stays open but goes silent (wedged process)
+    is reclaimed within one heartbeat-timeout window."""
+    survivor = BrokerClient(broker.path, name="survivor", share=1.0,
+                            slots=4, heartbeat_interval=0.1).start()
+    try:
+        # a raw, never-heartbeating registration
+        silent = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        silent.connect(broker.path)
+        send_msg(silent, {"op": "register", "name": "wedged",
+                          "share": 1.0, "slots": 4, "pid": 0})
+        assert recv_msg(silent)["op"] == "grant"
+        assert _wait_until(lambda: survivor.granted == 2)
+
+        t0 = time.monotonic()
+        # silence: no heartbeats. Reclaim must land within the timeout
+        # (0.6 s) plus one reaping pass — bounded, asserted generously.
+        assert _wait_until(lambda: survivor.granted == 4, timeout=5.0)
+        assert time.monotonic() - t0 < 4.0
+        assert list(broker.snapshot()["workers"]) == ["survivor"]
+        silent.close()
+    finally:
+        survivor.stop()
+
+
+# --------------------------------------------------------------------- #
+# fault path 2: broker dies mid-run
+# --------------------------------------------------------------------- #
+def _broker_main(path: str, capacity: int) -> None:
+    NodeBroker(path, capacity=capacity,
+               heartbeat_timeout=0.6).serve_forever()
+
+
+def test_broker_killed_workers_degrade_to_free_running():
+    """Killing the broker mid-run must leave workers free-running at full
+    local width — never hung, never throttled by a dead coordinator."""
+    path = _path()
+    proc = _CTX.Process(target=_broker_main, args=(path, 4), daemon=True)
+    proc.start()
+    assert _wait_until(lambda: os.path.exists(path), timeout=10.0)
+
+    rt1 = UsfRuntime(Topology(4, 1), SchedCoop())
+    rt2 = UsfRuntime(Topology(4, 1), SchedCoop())
+    c1 = BrokerClient(path, name="w1", heartbeat_interval=0.1)\
+        .bind(rt1).start()
+    c2 = BrokerClient(path, name="w2", heartbeat_interval=0.1)\
+        .bind(rt2).start()
+    try:
+        assert _wait_until(lambda: rt1.sched.slot_target() == 2
+                           and rt2.sched.slot_target() == 2)
+
+        proc.kill()  # the coordinator vanishes without a goodbye
+        proc.join(10.0)
+        assert _wait_until(lambda: c1.degraded and c2.degraded,
+                           timeout=5.0)
+        # degraded = free-running: full local width restored
+        assert rt1.sched.slot_target() == 4
+        assert rt2.sched.slot_target() == 4
+        # and the runtimes still run work (no hang, no poisoned state)
+        job = Job("after")
+        t = rt1.create(lambda: time.sleep(0.01), job=job)
+        assert rt1.join(t, timeout=30.0)
+        # lease ops now fail loudly instead of hanging
+        with pytest.raises(OSError):
+            c1.resize(2.0)
+    finally:
+        c1.stop()
+        c2.stop()
+        rt1.shutdown(timeout=5.0)
+        rt2.shutdown(timeout=5.0)
+        if proc.is_alive():
+            proc.kill()
+
+
+def test_malformed_message_drops_sender_not_broker(broker):
+    """A buggy client (well-framed message, garbage fields) costs ITSELF
+    the connection; the broker loop and sibling coordination survive."""
+    survivor = BrokerClient(broker.path, name="survivor", share=1.0,
+                            slots=4, heartbeat_interval=0.1).start()
+    try:
+        bad = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        bad.connect(broker.path)
+        send_msg(bad, {"op": "register", "name": "bad", "share": 1.0,
+                       "slots": 4, "pid": 0})
+        assert recv_msg(bad)["op"] == "grant"
+        assert _wait_until(lambda: survivor.granted == 2)
+
+        send_msg(bad, {"op": "rescale"})  # missing "scale": KeyError-bait
+        # the offender is dropped and its lease reclaimed...
+        assert _wait_until(lambda: survivor.granted == 4, timeout=3.0)
+        assert list(broker.snapshot()["workers"]) == ["survivor"]
+        # ...and the broker still serves new registrations (loop alive)
+        late = BrokerClient(broker.path, name="late", share=1.0, slots=4,
+                            heartbeat_interval=0.1).start()
+        assert late.wait_grant(5.0) == 2
+        late.stop()
+        bad.close()
+    finally:
+        survivor.stop()
+
+
+def test_second_broker_refuses_to_hijack_live_path(broker):
+    """A broker never steals a rendezvous path a LIVE broker serves (two
+    runs sharing the per-user default path must fail fast, not silently
+    split the lease table); a stale socket file IS reclaimed."""
+    from repro.ipc.broker import BrokerError
+
+    with pytest.raises(BrokerError, match="already serving"):
+        NodeBroker(broker.path, capacity=4).start()
+    # the live broker kept working through the probe
+    c = BrokerClient(broker.path, name="w0", slots=4,
+                     heartbeat_interval=0.1).start()
+    assert c.wait_grant(5.0) == 4
+    c.stop()
+
+    # stale socket (dead broker left the file): reclaimed cleanly
+    path = _path()
+    b1 = NodeBroker(path, capacity=2, heartbeat_timeout=0.6)
+    b1.start()
+    b1.stop()
+    open(path, "a").close() if not os.path.exists(path) else None
+    # recreate a dead socket file the unlink-on-stop may have removed
+    import socket as _s
+
+    s = _s.socket(_s.AF_UNIX, _s.SOCK_STREAM)
+    try:
+        s.bind(path)
+    except OSError:
+        pass
+    s.close()  # bound then closed: file exists, nobody listens
+    b2 = NodeBroker(path, capacity=2, heartbeat_timeout=0.6)
+    b2.start()
+    c = BrokerClient(path, name="w0", slots=2,
+                     heartbeat_interval=0.1).start()
+    assert c.wait_grant(5.0) == 2
+    c.stop()
+    b2.stop()
+
+
+def test_send_failure_during_stop_is_not_a_degrade(broker):
+    """A deregister/lease-op send failing while stop() is underway is an
+    intentional shutdown, not a broker loss: no degraded flag, no
+    on_disconnect callback, no width restore. (White-box: the stop event
+    is raised first, exactly as stop() does, because a killed broker's
+    EOF otherwise reaches the recv thread instantly and wins any timing
+    race.)"""
+    events = []
+    c = BrokerClient(broker.path, name="w0", slots=4,
+                     heartbeat_interval=10.0,
+                     on_disconnect=lambda: events.append("lost"))
+    c.start()
+    assert c.wait_grant(5.0) == 4
+    c._stop_evt.set()        # stop() has begun...
+    c._sock.close()          # ...and the broker-side socket is gone
+    with pytest.raises(OSError):
+        c._send({"op": "deregister"})
+    assert c.degraded is False
+    assert events == []
+    c.stop()                 # idempotent clean finish
+    assert c.degraded is False
+
+
+def test_snapshot_disambiguates_duplicate_worker_names(broker):
+    c1 = BrokerClient(broker.path, name="worker", slots=4,
+                      heartbeat_interval=0.1).start()
+    c2 = BrokerClient(broker.path, name="worker", slots=4,
+                      heartbeat_interval=0.1).start()
+    try:
+        assert _wait_until(lambda: c1.granted == 2 and c2.granted == 2)
+        workers = broker.snapshot()["workers"]
+        assert len(workers) == 2  # no lease silently collapsed
+        assert sum(w["granted"] for w in workers.values()) == 4
+    finally:
+        c1.stop()
+        c2.stop()
+
+
+def test_explicit_zero_share_is_best_effort_not_default(broker):
+    """share=0.0 must reach the broker as zero (best-effort worker), not
+    be coerced to the 1.0 default: it yields to weighted siblings and
+    only borrows what they cannot use."""
+    best_effort = BrokerClient(broker.path, name="be", share=0.0, slots=4,
+                               heartbeat_interval=0.1).start()
+    weighted = BrokerClient(broker.path, name="wt", share=1.0, slots=3,
+                            heartbeat_interval=0.1).start()
+    try:
+        # weighted takes its full demand (3); the zero-share worker only
+        # borrows the slot nobody with a lease wants
+        assert _wait_until(lambda: weighted.granted == 3
+                           and best_effort.granted == 1)
+        snap = broker.snapshot()
+        assert snap["workers"]["be"]["share"] == 0.0
+        assert snap["workers"]["be"]["quota"] == 0
+    finally:
+        best_effort.stop()
+        weighted.stop()
+
+
+def test_client_start_against_missing_broker_raises():
+    """No broker at the path: connect fails fast (the caller decides to
+    run free), it does not hang."""
+    with pytest.raises(OSError):
+        BrokerClient(_path(), name="w0").start(connect_timeout=1.0)

@@ -1,0 +1,189 @@
+"""The extracted lease/quota machinery (repro.core.lease): the shared
+apportionment + I5 borrow order both the in-process SlotArbiter and the
+node-level broker consume. The extraction must be behaviour-identical to
+the arbiter's previous inline implementation — property-tested here and
+cross-checked against live SlotArbiter quotas."""
+
+import random
+
+import pytest
+
+from repro.core.events import SimExecutor
+from repro.core.lease import LeaseTable, apportion, borrow_order
+from repro.core.policies import SchedCoop, SchedFair
+from repro.core.task import Job
+from repro.core.topology import Topology
+
+
+class Entry:
+    __slots__ = ("share", "quota", "in_use", "tag")
+
+    def __init__(self, share, in_use=0, tag=""):
+        self.share = share
+        self.quota = 0
+        self.in_use = in_use
+        self.tag = tag
+
+
+# --------------------------------------------------------------------- #
+# apportion: largest remainder
+# --------------------------------------------------------------------- #
+def test_apportion_sums_to_capacity():
+    rng = random.Random(7)
+    for _ in range(200):
+        n = rng.randrange(0, 257)
+        k = rng.randrange(1, 9)
+        shares = [rng.choice([0.0, 0.5, 1.0, 2.0, 7.0, 1024.0])
+                  for _ in range(k)]
+        quotas = apportion(n, shares)
+        assert len(quotas) == k
+        assert all(q >= 0 for q in quotas)
+        if n > 0:
+            assert sum(quotas) == n, (n, shares, quotas)
+
+
+def test_apportion_proportionality():
+    assert apportion(8, [1.0, 3.0]) == [2, 6]
+    assert apportion(8, [1.0, 1.0]) == [4, 4]
+    assert apportion(16, [1.0, 7.0]) == [2, 14]
+    # largest remainder: 10 * [1,1,1]/3 = 3.33 each -> remainders break
+    # the tie in entry order
+    assert apportion(10, [1.0, 1.0, 1.0]) == [4, 3, 3]
+
+
+def test_apportion_zero_shares_fall_back_to_equal():
+    assert apportion(8, [0.0, 0.0]) == [4, 4]
+    assert apportion(3, [0.0, 0.0]) == [2, 1]
+
+
+def test_apportion_empty_and_zero_capacity():
+    assert apportion(8, []) == []
+    assert apportion(0, [1.0, 2.0]) == [0, 0]
+
+
+def test_apportion_integer_exactness_never_loses_whole_quota():
+    # a share entitled to an exact integer must get at least that floor
+    for n, shares in ((8, [2.0, 6.0]), (112, [1.0] * 7), (56, [4.0, 4.0])):
+        quotas = apportion(n, shares)
+        total = sum(shares)
+        for q, s in zip(quotas, shares):
+            assert q >= int(n * s / total)
+
+
+# --------------------------------------------------------------------- #
+# borrow order: the I5 grant rule
+# --------------------------------------------------------------------- #
+def test_borrow_order_spare_lease_first():
+    a = Entry(1.0, in_use=0, tag="spare-2")   # quota 2 below
+    b = Entry(1.0, in_use=3, tag="over-1")
+    c = Entry(1.0, in_use=1, tag="spare-1")
+    for e, q in ((a, 2), (b, 2), (c, 2)):
+        e.quota = q
+    order = [e.tag for e in borrow_order([a, b, c])]
+    # most spare first, borrowers (over quota) strictly last
+    assert order == ["spare-2", "spare-1", "over-1"]
+
+
+def test_borrow_order_ties_break_by_given_order():
+    a, b = Entry(1.0, tag="first"), Entry(1.0, tag="second")
+    a.quota = b.quota = 1
+    assert [e.tag for e in borrow_order([a, b])] == ["first", "second"]
+    assert [e.tag for e in borrow_order([b, a])] == ["second", "first"]
+
+
+def test_borrow_order_least_over_first_among_borrowers():
+    a = Entry(1.0, in_use=5, tag="over-3")
+    b = Entry(1.0, in_use=3, tag="over-1")
+    a.quota = b.quota = 2
+    assert [e.tag for e in borrow_order([a, b])] == ["over-1", "over-3"]
+
+
+# --------------------------------------------------------------------- #
+# LeaseTable
+# --------------------------------------------------------------------- #
+def test_lease_table_recompute_writes_quotas():
+    t = LeaseTable(8)
+    a, b = Entry(1.0), Entry(3.0)
+    t.add("a", a)
+    t.add("b", b)
+    t.recompute()
+    assert (a.quota, b.quota) == (2, 6)
+    b.share = 1.0
+    t.recompute()
+    assert (a.quota, b.quota) == (4, 4)
+    t.pop("b")
+    t.recompute()
+    assert a.quota == 8
+
+
+def test_lease_table_membership_and_spare():
+    t = LeaseTable(4)
+    a = Entry(1.0, in_use=1)
+    t.add("a", a)
+    assert "a" in t and len(t) == 1 and t.get("a") is a
+    assert t.spare() == 3
+    assert t.get("missing") is None
+
+
+# --------------------------------------------------------------------- #
+# equivalence: the arbiter's quotas ARE the table's quotas
+# --------------------------------------------------------------------- #
+def test_arbiter_quotas_match_standalone_table():
+    """The extraction is behaviour-preserving: a SlotArbiter with K
+    attached jobs computes exactly the quotas a standalone LeaseTable
+    computes for the same shares over the same capacity."""
+    rng = random.Random(11)
+    for trial in range(20):
+        n_slots = rng.choice([4, 8, 16, 112])
+        sim = SimExecutor(Topology(n_slots, 1), SchedCoop(quantum=0.01),
+                          max_time=1e9)
+        shares = [rng.choice([0.5, 1.0, 2.0, 3.0, 7.0])
+                  for _ in range(rng.randrange(1, 6))]
+        leases = []
+        for i, s in enumerate(shares):
+            job = Job(f"j{trial}-{i}")
+            policy = (SchedCoop(quantum=0.01) if i % 2 == 0
+                      else SchedFair(slice_s=0.002))
+            leases.append(sim.attach(job, policy=policy, share=s))
+        table = LeaseTable(n_slots)
+        entries = [Entry(s) for s in shares]
+        for i, e in enumerate(entries):
+            table.add(i, e)
+        table.recompute()
+        for lease, entry in zip(leases, entries):
+            assert lease.quota == entry.quota, (
+                trial, n_slots, shares, lease.share)
+
+
+def test_pick_multi_candidate_order_is_borrow_order():
+    """The arbiter inlines the I5 grant order into its per-pick filter
+    pass (hot path); this locksteps that inline ordering against the
+    shared ``lease.borrow_order`` over random lease states."""
+    rng = random.Random(23)
+    for _ in range(300):
+        k = rng.randrange(1, 7)
+        groups = []
+        for i in range(k):
+            e = Entry(1.0, in_use=rng.randrange(0, 6), tag=i)
+            e.quota = rng.randrange(0, 6)
+            groups.append(e)
+        # the arbiter's inline construction (filter + tuple sort) ...
+        candidates = [(g.in_use - g.quota, i, g)
+                      for i, g in enumerate(groups)]
+        candidates.sort()
+        inline = [g for _, _, g in candidates]
+        # ... must equal the shared borrow order
+        assert inline == borrow_order(groups)
+
+
+def test_arbiter_capacity_tracks_slot_target():
+    """Elastic slot parking re-apportions the in-process leases over the
+    ACTIVE pool: shrinking the target shrinks quotas proportionally."""
+    sim = SimExecutor(Topology(8, 1), SchedCoop(quantum=0.01), max_time=1e9)
+    la = sim.attach(Job("a"), policy=SchedCoop(quantum=0.01), share=1.0)
+    lb = sim.attach(Job("b"), policy=SchedCoop(quantum=0.01), share=3.0)
+    assert (la.quota, lb.quota) == (2, 6)
+    sim.set_slot_target(4)
+    assert (la.quota, lb.quota) == (1, 3)
+    sim.set_slot_target(None)
+    assert (la.quota, lb.quota) == (2, 6)

@@ -1,0 +1,69 @@
+"""Multi-process serving (repro.serve.multiproc): N model-server
+processes behind one gateway, node slots brokered across them. Slow: the
+server children each initialize their own JAX runtime."""
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.mark.parametrize("coordinate", [True, False])
+def test_multiprocess_gateway_serves(coordinate):
+    """Requests fan out to every server process and join; with
+    coordination the broker splits the node, without it the processes run
+    free — both complete (coordination is never a liveness dependency)."""
+    from repro.serve.multiproc import MultiProcessGateway
+
+    gw = MultiProcessGateway(
+        {"srv-a": "smollm_360m", "srv-b": "qwen1_5_110b"},
+        coordinate=coordinate, node_capacity=2, slots_per_server=2,
+        max_batch=2, max_len=32, smoke=True)
+    try:
+        gw.start(ready_timeout=300.0)
+        if coordinate:
+            snap = gw.broker.snapshot()
+            assert sorted(snap["workers"]) == ["srv-a", "srv-b"]
+            assert sum(w["granted"] for w in snap["workers"].values()) == 2
+        for _ in range(2):
+            rec = gw.handle([5, 6, 7], max_new=3, timeout=300.0)
+            assert rec["latency"] > 0
+            assert sorted(rec["outputs"]) == ["srv-a", "srv-b"]
+            for out in rec["outputs"].values():
+                assert len(out) == 3
+        assert len(gw.responses) == 2
+        if coordinate:
+            # each server pump reported its brokered grant with results
+            assert all(s.served == 2 for s in gw.servers)
+    finally:
+        gw.stop()
+
+
+def test_dead_server_process_surfaces_not_hangs():
+    """A server process killed mid-flight raises ServerProcessError at the
+    caller (and, under coordination, its node lease is reclaimed)."""
+    from repro.serve.multiproc import MultiProcessGateway, ServerProcessError
+
+    gw = MultiProcessGateway(
+        {"srv-a": "smollm_360m", "srv-b": "qwen1_5_110b"},
+        coordinate=True, node_capacity=2, slots_per_server=2,
+        max_batch=2, max_len=32, smoke=True)
+    try:
+        gw.start(ready_timeout=300.0)
+        gw.handle([5, 6], max_new=2, timeout=300.0)  # warm + sane
+        victim = gw.servers[0]
+        victim._proc.kill()
+        victim._proc.join(10.0)
+        with pytest.raises((ServerProcessError, TimeoutError)):
+            gw.handle([5, 6], max_new=2, timeout=60.0)
+        # the broker reclaimed the dead server's node lease
+        import time
+
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            workers = gw.broker.snapshot()["workers"]
+            if list(workers) == ["srv-b"]:
+                break
+            time.sleep(0.1)
+        assert list(gw.broker.snapshot()["workers"]) == ["srv-b"]
+    finally:
+        gw.stop()

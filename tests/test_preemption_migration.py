@@ -1218,3 +1218,160 @@ def test_mesh_rescale_regrow_restores_share():
     assert lease.share == 4.0
     with pytest.raises(ValueError):
         MeshRescaleEvent((0,), (8,)).scale
+
+
+def test_mesh_regrow_auto_repromotes_collapsed_job():
+    """The PR 4 caveat closed: with a policy_factory registered, a
+    collapse-demoted job is automatically RE-PROMOTED (fresh dedicated
+    policy + lease) by the first event that regrows its mesh — no manual
+    attach needed — at the pre-collapse share scaled by the regrown
+    fraction."""
+    from repro.launch.rescale import ElasticCoordinator, MeshRescaleEvent
+
+    sim = SimExecutor(Topology(8, 1), SchedCoop(quantum=0.01), max_time=1e9)
+    train, serve = Job("rtrain"), Job("rserve")
+    coord = ElasticCoordinator(runtime=sim)
+    factory = lambda: SchedFair(slice_s=0.002)  # noqa: E731
+    coord.register(
+        sim.attach(train, policy=factory(), share=4.0),
+        demote_on_collapse=True, policy_factory=factory)
+    # the sibling is co-located but tracks its OWN mesh: not registered
+    # with this coordinator (a collapse event would zero its share too)
+    sim.attach(serve, policy=SchedCoop(quantum=0.01), share=4.0)
+
+    def churn(n):
+        def gen():
+            for _ in range(n):
+                yield st.compute(0.002)
+                yield st.sleep(0.0005)
+        return gen
+
+    tasks = [sim.spawn(train, churn(200)) for _ in range(4)]
+    tasks += [sim.spawn(serve, churn(200)) for _ in range(4)]
+    sim.run(until=0.01)  # busy mid-flight
+
+    # collapse: train demoted live into the default group
+    shares = coord.on_rescale(MeshRescaleEvent((8, 16), (0, 16)))
+    assert shares["rtrain"] == 0.0
+    assert train.lease is not None and not train.lease.group.dedicated
+    sim.run(until=0.02)
+
+    # regrow to HALF the pre-collapse mesh: auto re-promotion at half the
+    # pre-collapse share, under a FRESH dedicated policy instance
+    shares = coord.on_rescale(MeshRescaleEvent((0, 16), (4, 16)))
+    assert shares["rtrain"] == pytest.approx(2.0)
+    lease = train.lease
+    assert lease is not None and lease.group.dedicated
+    assert lease.share == pytest.approx(2.0)
+    assert sim.sched.policy_of(train).name == "SCHED_FAIR"
+    # the unregistered sibling was untouched throughout
+    assert "rserve" not in shares
+    assert serve.lease.share == pytest.approx(4.0)
+    sim.run(until=0.03)
+
+    # the re-registered lease keeps tracking: a SECOND collapse demotes
+    # again, and a full regrow re-promotes at the full original fraction
+    shares = coord.on_rescale(MeshRescaleEvent((4, 16), (0, 16)))
+    assert shares["rtrain"] == 0.0
+    assert not train.lease.group.dedicated
+    shares = coord.on_rescale(MeshRescaleEvent((0, 16), (4, 16)))
+    assert train.lease.group.dedicated
+    assert train.lease.share == pytest.approx(2.0)
+    sim.run()
+    assert all(t.done for t in tasks)
+
+
+def test_regrow_skips_manually_repromoted_job():
+    """A job the user already re-attached out-of-band is left alone by
+    the auto-re-promotion pass (the manual registration is in charge)."""
+    from repro.launch.rescale import ElasticCoordinator, MeshRescaleEvent
+
+    sim = SimExecutor(Topology(4, 1), SchedCoop(quantum=0.01), max_time=1e9)
+    job = Job("manual")
+    coord = ElasticCoordinator(runtime=sim)
+    factory = lambda: SchedFair(slice_s=0.002)  # noqa: E731
+    coord.register(sim.attach(job, policy=factory(), share=2.0),
+                   demote_on_collapse=True, policy_factory=factory)
+    coord.on_rescale(MeshRescaleEvent((8,), (0,)))
+    assert not job.lease.group.dedicated
+
+    manual_policy = SchedRR(quantum=0.002)
+    manual = sim.attach(job, policy=manual_policy, share=3.0)
+    shares = coord.on_rescale(MeshRescaleEvent((0,), (8,)))
+    assert "manual" not in shares  # auto pass left it alone
+    assert job.lease is manual and manual.share == 3.0
+    assert sim.sched.policy_of(job) is manual_policy
+
+
+def test_policy_factory_requires_collapse_opt_in():
+    from repro.launch.rescale import ElasticCoordinator
+
+    sim = SimExecutor(Topology(4, 1), SchedCoop(quantum=0.01), max_time=1e9)
+    job = Job("nope")
+    lease = sim.attach(job, policy=SchedFair(slice_s=0.002), share=1.0)
+    with pytest.raises(ValueError, match="policy_factory"):
+        ElasticCoordinator(runtime=sim).register(
+            lease, policy_factory=lambda: SchedFair(slice_s=0.002))
+
+
+def test_rescale_routes_to_node_broker():
+    """With a broker wired in, every mesh event also rescales the
+    process's NODE-level share (cross-process reclaim)."""
+    from repro.launch.rescale import ElasticCoordinator, MeshRescaleEvent
+
+    class FakeBrokerClient:
+        def __init__(self):
+            self.scales = []
+
+        def rescale(self, scale):
+            self.scales.append(scale)
+
+    sim = SimExecutor(Topology(4, 1), SchedCoop(quantum=0.01), max_time=1e9)
+    job = Job("routed")
+    broker = FakeBrokerClient()
+    coord = ElasticCoordinator(runtime=sim, broker=broker)
+    coord.register(sim.attach(job, policy=SchedCoop(quantum=0.01),
+                              share=2.0))
+    coord.on_rescale(MeshRescaleEvent((8, 16), (4, 16)))
+    assert broker.scales == [0.5]
+    assert job.lease.share == pytest.approx(1.0)
+    # events reach the broker even when no local lease is registered
+    # (the node share tracks the mesh regardless of in-process attach)
+    coord2 = ElasticCoordinator(broker=broker)
+    coord2.on_rescale(MeshRescaleEvent((4, 16), (8, 16)))
+    assert broker.scales == [0.5, 2.0]
+
+
+def test_broker_share_recovers_across_collapse_round_trip():
+    """A collapse zeroes the node share multiplicatively — 0 times any
+    later scale stays 0 — so the regrow must RESTORE it absolutely
+    (broker.resize), scaled by the regrown device fraction."""
+    from repro.launch.rescale import ElasticCoordinator, MeshRescaleEvent
+
+    class FakeBrokerClient:
+        def __init__(self):
+            self.share = 4.0
+            self.calls = []
+
+        def rescale(self, scale):
+            self.share *= scale
+            self.calls.append(("rescale", scale))
+
+        def resize(self, share):
+            self.share = share
+            self.calls.append(("resize", share))
+
+    broker = FakeBrokerClient()
+    coord = ElasticCoordinator(broker=broker)
+    coord.on_rescale(MeshRescaleEvent((8, 16), (0, 16)))  # collapse
+    assert broker.share == 0.0
+    # regrow to half the pre-collapse mesh: node share restored to half
+    coord.on_rescale(MeshRescaleEvent((0, 16), (4, 16)))
+    assert broker.share == pytest.approx(2.0)
+    assert broker.calls[-1] == ("resize", 2.0)
+    # a second regrow-from-zero without a recorded collapse is a no-op
+    coord.on_rescale(MeshRescaleEvent((0, 16), (8, 16)))
+    assert broker.share == pytest.approx(2.0)
+    # and ordinary events keep multiplying from the restored base
+    coord.on_rescale(MeshRescaleEvent((4, 16), (8, 16)))
+    assert broker.share == pytest.approx(4.0)

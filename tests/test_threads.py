@@ -364,3 +364,114 @@ def test_affinity_hint_stored_and_returned(rt):
     task = rt.create(body, job=job)
     _join_all(rt, [task])
     assert out["hint"] == frozenset({0})
+
+
+def test_coop_mutex_lock_timeout_gated(rt):
+    """CoopMutex.lock(timeout=...) returns bool — consistent with
+    CoopEvent.wait(timeout) — for gated waiters: a held lock times the
+    contender out; a timely handoff returns True."""
+    job = Job("j")
+    m = CoopMutex(rt)
+    out = {}
+    holder_locked = threading.Event()
+    release = CoopEvent(rt)
+
+    def holder():
+        assert m.lock() is True
+        holder_locked.set()
+        release.wait()
+        m.unlock()
+
+    def contender():
+        out["timed_out"] = m.lock(timeout=0.05)     # held: must time out
+        release.set()
+        out["acquired"] = m.lock(timeout=10.0)      # free soon: must win
+        if out["acquired"]:
+            m.unlock()
+
+    t1 = rt.create(holder, job=job)
+    assert holder_locked.wait(5.0)
+    t2 = rt.create(contender, job=job)
+    _join_all(rt, [t1, t2])
+    assert out["timed_out"] is False
+    assert out["acquired"] is True
+    # the lock is fully released: an uncontended lock is immediate
+    assert m.lock(timeout=0.0) is True
+    m.unlock()
+
+
+def test_coop_mutex_lock_timeout_plain_thread(rt):
+    """Plain (non-USF) threads honor the same timeout via the embedded
+    Event — mixed use against the SAME mutex state."""
+    job = Job("j")
+    m = CoopMutex(rt)
+    locked = threading.Event()
+    release = CoopEvent(rt)
+
+    def gated_holder():
+        m.lock()
+        locked.set()
+        release.wait()
+        m.unlock()
+
+    t = rt.create(gated_holder, job=job)
+    assert locked.wait(5.0)
+    out = {}
+
+    def plain():
+        out["timed_out"] = m.lock(timeout=0.05)
+        release.set()
+        out["acquired"] = m.lock(timeout=10.0)
+        if out["acquired"]:
+            m.unlock()
+
+    th = threading.Thread(target=plain)
+    th.start()
+    th.join(30.0)
+    assert not th.is_alive()
+    _join_all(rt, [t])
+    assert out["timed_out"] is False
+    assert out["acquired"] is True
+
+
+def test_coop_mutex_timeout_zero_is_trylock(rt):
+    m = CoopMutex(rt)
+    assert m.lock(timeout=0.0) is True   # uncontended: granted
+    assert m.lock(timeout=0.0) is False  # held: immediate refusal...
+    assert m.lock(timeout=-1.0) is False
+    m.unlock()
+
+
+def test_coop_mutex_timed_out_waiter_skipped_by_unlock(rt):
+    """A waiter that timed out must be withdrawn from the FIFO: the next
+    unlock hands off to the NEXT waiter (or frees the lock), it does not
+    reserve ownership for a ghost."""
+    job = Job("j")
+    m = CoopMutex(rt)
+    locked = threading.Event()
+    release = CoopEvent(rt)
+    order = []
+
+    def holder():
+        m.lock()
+        locked.set()
+        release.wait()
+        m.unlock()
+
+    def quitter():
+        order.append(("quitter", m.lock(timeout=0.05)))
+
+    def patient():
+        order.append(("patient", m.lock(timeout=30.0)))
+        m.unlock()
+
+    t1 = rt.create(holder, job=job)
+    assert locked.wait(5.0)
+    t2 = rt.create(quitter, job=job)
+    _join_all(rt, [t2])  # quitter gave up while the lock is still held
+    t3 = rt.create(patient, job=job)
+    time.sleep(0.02)  # patient is queued behind the (gone) quitter
+    release.set()
+    _join_all(rt, [t1, t3])
+    assert ("quitter", False) in order
+    assert ("patient", True) in order
