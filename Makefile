@@ -2,15 +2,18 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: check test test-all bench-sched-ops bench-colocation \
-	bench-multiprocess bench-multiprocess-smoke
+	bench-multiprocess bench-multiprocess-smoke bench-faults \
+	bench-faults-smoke
 
 ## check: the fast CI gate — clean-collecting tier-1 tests (slow ones are
-## deselected via pyproject addopts) + the sched-ops/arbiter microbench in
-## smoke mode, perf-gated: SCHED_COOP/SCHED_FAIR pick-cycle throughput must
-## stay within 30% of the committed BENCH_sched_ops.json baseline — plus the
-## cross-process broker benchmark in smoke mode (machinery end-to-end; the
-## >=1.5x ratio is asserted only in the full nightly run)
-check: test bench-sched-ops bench-multiprocess-smoke
+## deselected via pyproject addopts; the chaos smoke seeds ride along) +
+## the sched-ops/arbiter microbench in smoke mode, perf-gated:
+## SCHED_COOP/SCHED_FAIR pick-cycle throughput must stay within 30% of the
+## committed BENCH_sched_ops.json baseline — plus the cross-process broker
+## benchmark in smoke mode (machinery end-to-end; the >=1.5x ratio is
+## asserted only in the full nightly run) and the fault-recovery benchmark
+## in smoke mode (broker-kill MTTR + grant-convergence machinery)
+check: test bench-sched-ops bench-multiprocess-smoke bench-faults-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -31,3 +34,9 @@ bench-multiprocess:
 bench-multiprocess-smoke:
 	$(PY) -m benchmarks.multiprocess --smoke \
 		--out BENCH_multiprocess.smoke.json
+
+bench-faults:
+	$(PY) -m benchmarks.faults
+
+bench-faults-smoke:
+	$(PY) -m benchmarks.faults --smoke --out BENCH_faults.smoke.json

@@ -1,0 +1,239 @@
+"""Self-healing under faults — recovery latency, measured.
+
+Two scenarios quantify the PR 6 robustness layer:
+
+* ``broker_mttr`` — a broker *process* (real OS process, SIGKILLed) dies
+  under N coordinated workers and is restarted on the same rendezvous
+  path. Measured per repetition:
+
+  - **detect**: kill → every client degraded to free-running (the outage
+    is noticed; the workers are already safe — degrade is immediate, so
+    this is the only window where a worker might briefly run a stale cap);
+  - **rejoin**: new broker ready → every client re-registered,
+    re-coordinated, grants summing to capacity under the new incarnation;
+  - **MTTR**: kill → fully re-coordinated (detect + restart gap + rejoin).
+
+* ``grant_convergence`` — lease churn against a live broker: resizes and
+  worker join/leave events, each timed until every client's applied grant
+  agrees with the broker and grants sum to node capacity again.
+
+Run:  PYTHONPATH=src python -m benchmarks.faults [--smoke]
+Writes BENCH_faults.json (smoke: BENCH_faults.smoke.json via
+``make check``). Latency distributions are reported, not asserted — CI
+hosts are noisy; the chaos suite (tests/test_chaos.py) owns the
+pass/fail invariants.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing as mp
+import os
+import sys
+import tempfile
+import time
+
+_CTX = mp.get_context("spawn")
+
+CAPACITY = 4
+N_WORKERS = 4
+
+
+def _path() -> str:
+    return os.path.join(tempfile.mkdtemp(prefix="usf-faults-"), "broker.sock")
+
+
+def _wait_until(cond, timeout, what, step=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return
+        time.sleep(step)
+    if not cond():
+        raise RuntimeError(f"bench hung: {what} not reached in {timeout}s")
+
+
+def _stats(xs) -> dict:
+    xs = sorted(xs)
+    return {
+        "n": len(xs),
+        "mean": round(sum(xs) / len(xs), 4),
+        "p50": round(xs[len(xs) // 2], 4),
+        "max": round(xs[-1], 4),
+    }
+
+
+# --------------------------------------------------------------------- #
+# scenario 1: broker killed + restarted — MTTR
+# --------------------------------------------------------------------- #
+def _broker_main(path: str, capacity: int, ready) -> None:
+    """Standalone broker process (the SIGKILL victim)."""
+    from repro.ipc import NodeBroker
+
+    broker = NodeBroker(path, capacity=capacity, heartbeat_timeout=1.0)
+    broker.start()
+    ready.set()
+    while True:  # killed, never stopped
+        time.sleep(3600.0)
+
+
+def _spawn_broker(path: str):
+    ready = _CTX.Event()
+    proc = _CTX.Process(target=_broker_main, args=(path, CAPACITY, ready),
+                        daemon=True)
+    proc.start()
+    if not ready.wait(60.0):
+        proc.kill()
+        raise RuntimeError("broker process failed to come up")
+    return proc
+
+
+def _coordinated(clients) -> bool:
+    from repro.ipc import BrokerClient
+
+    return (all(c.state == BrokerClient.COORDINATED for c in clients)
+            and sum(c.granted or 0 for c in clients) == CAPACITY
+            and len({c.incarnation for c in clients}) == 1)
+
+
+def run_broker_mttr(reps: int) -> dict:
+    from repro.ipc import BrokerClient
+
+    path = _path()
+    proc = _spawn_broker(path)
+    clients = [
+        BrokerClient(path, name=f"w{i}", share=1.0, slots=CAPACITY,
+                     heartbeat_interval=0.05,
+                     reconnect_backoff=(0.02, 0.25)).start(
+                         connect_timeout=15.0)
+        for i in range(N_WORKERS)
+    ]
+    detect, rejoin, mttr = [], [], []
+    try:
+        _wait_until(lambda: _coordinated(clients), 30.0, "initial grants")
+        for _ in range(reps):
+            incarnation = clients[0].incarnation
+            t_kill = time.monotonic()
+            proc.kill()
+            proc.join(30.0)
+            _wait_until(lambda: all(c.degraded for c in clients), 30.0,
+                        "outage detection")
+            detect.append(time.monotonic() - t_kill)
+            proc = _spawn_broker(path)  # restart on the same path
+            t_ready = time.monotonic()
+            _wait_until(
+                lambda: _coordinated(clients)
+                and clients[0].incarnation != incarnation,
+                30.0, "re-coordination")
+            t_conv = time.monotonic()
+            rejoin.append(t_conv - t_ready)
+            mttr.append(t_conv - t_kill)
+    finally:
+        for c in clients:
+            c.stop()
+        proc.kill()
+        proc.join(10.0)
+    return {
+        "reps": reps,
+        "n_workers": N_WORKERS,
+        "capacity": CAPACITY,
+        "detect_s": _stats(detect),
+        "rejoin_s": _stats(rejoin),
+        "mttr_s": _stats(mttr),
+        "reconnects": {c.name: c.reconnects for c in clients},
+    }
+
+
+# --------------------------------------------------------------------- #
+# scenario 2: lease churn — grant convergence latency
+# --------------------------------------------------------------------- #
+def run_grant_convergence(events: int) -> dict:
+    import random
+
+    from repro.ipc import BrokerClient, NodeBroker
+
+    rng = random.Random(0)
+    path = _path()
+    broker = NodeBroker(path, capacity=CAPACITY, heartbeat_timeout=1.0)
+    broker.start()
+    clients = [
+        BrokerClient(path, name=f"w{i}", share=1.0, slots=CAPACITY,
+                     heartbeat_interval=0.05).start()
+        for i in range(N_WORKERS)
+    ]
+    extra = None  # the join/leave churn worker
+    settle = []
+
+    def _settled() -> bool:
+        live = clients + ([extra] if extra is not None else [])
+        snap = broker.snapshot()["workers"]
+        return (sorted(snap) == sorted(c.name for c in live)
+                and all(snap[c.name]["granted"] == c.granted for c in live)
+                and sum(c.granted or 0 for c in live) == CAPACITY)
+
+    try:
+        _wait_until(_settled, 30.0, "initial grants")
+        for i in range(events):
+            kind = rng.choice(["resize", "churn"])
+            t0 = time.monotonic()
+            if kind == "resize":
+                rng.choice(clients).resize(0.5 + 2.5 * rng.random())
+            elif extra is None:
+                extra = BrokerClient(
+                    path, name="churn", share=2.0, slots=CAPACITY,
+                    heartbeat_interval=0.05).start()
+            else:
+                extra.stop()
+                extra = None
+            _wait_until(_settled, 30.0, f"convergence after event {i}")
+            settle.append(time.monotonic() - t0)
+    finally:
+        for c in clients:
+            c.stop()
+        if extra is not None:
+            extra.stop()
+        broker.stop()
+    return {
+        "events": events,
+        "n_workers": N_WORKERS,
+        "capacity": CAPACITY,
+        "settle_s": _stats(settle),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="BENCH_faults.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer repetitions: proves the machinery")
+    args = ap.parse_args(argv)
+    reps = 2 if args.smoke else 5
+    events = 6 if args.smoke else 20
+
+    mttr = run_broker_mttr(reps)
+    print(f"broker_mttr ({reps} kills, {N_WORKERS} workers):")
+    print(f"  detect (kill -> all degraded):        {mttr['detect_s']}")
+    print(f"  rejoin (broker up -> re-coordinated): {mttr['rejoin_s']}")
+    print(f"  MTTR   (kill -> re-coordinated):      {mttr['mttr_s']}")
+
+    conv = run_grant_convergence(events)
+    print(f"grant_convergence ({events} churn events): {conv['settle_s']}")
+
+    payload = {
+        "bench": "faults",
+        "smoke": args.smoke,
+        "scenarios": {
+            "broker_mttr": mttr,
+            "grant_convergence": conv,
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

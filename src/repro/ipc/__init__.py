@@ -10,22 +10,56 @@ coordinated purely in user space. This package is that layer:
   heartbeat-based liveness reclaims a dead worker's lease.
 * ``BrokerClient`` (client.py) — one per worker process: registers a
   share, receives grants, and lands them on the runtime's elastic slot
-  parking (``UsfRuntime.set_slot_target``). A dead broker degrades the
-  worker to free-running — never a deadlock.
+  parking (``UsfRuntime.set_slot_target``).
+* ``FaultPlan`` (faults.py) — a seeded, deterministic fault injector
+  wrapped around a client's protocol layer (drops, delays, truncated
+  frames, duplicated/reordered grants, resets, heartbeat stalls); the
+  chaos suite (tests/test_chaos.py) drives it.
 * ``protocol`` — the tiny length-prefixed JSON framing over Unix sockets.
+
+Failure/recovery semantics (coordination is an optimization, never a
+liveness dependency — and the system heals, it does not merely survive):
+
+* **Degrade immediately, heal in the background.** A lost broker (EOF,
+  send failure, reset) drops the worker to free-running at full local
+  width at once; a reconnect loop with exponential backoff + jitter then
+  re-registers it under the same name/share/demand and resumes
+  coordination. The client walks a transient
+  ``COORDINATED → DEGRADED → RECONNECTING → COORDINATED`` state machine
+  (``BrokerClient.state``); ``reconnect=False`` restores the terminal
+  degrade.
+* **Epoch fencing.** Every broker start mints an ``incarnation`` id,
+  sent on the ``welcome`` handshake and carried on every grant alongside
+  the monotonic grant ``epoch``. Clients drop grants from a stale
+  (incarnation, epoch) pair — a grant racing a reconnect can never
+  shrink a worker on a dead broker's authority. A restarted broker takes
+  over the rendezvous path and rebuilds its lease table purely from
+  re-registrations.
+* **Typed failures, never hangs.** Lease ops (``resize``/``rescale``)
+  on a lost broker raise ``BrokerLostError`` (a ``ConnectionError``);
+  the share change is still recorded locally and carried by the next
+  re-registration (queued-or-rejected).
+* **Lost-message healing.** The current grant rides every heartbeat ack,
+  so a dropped grant push heals within one heartbeat interval; a
+  heartbeat from an unregistered connection (lost ``register``) drops
+  the connection so the worker's reconnect loop re-registers it.
 
 Scheduling is thus three-level: NodeBroker (processes) → SlotArbiter
 (jobs) → intra-job policies (tasks), every level speaking leases.
 """
 
 from repro.ipc.broker import BrokerError, NodeBroker, ProcLease
-from repro.ipc.client import BrokerClient
+from repro.ipc.client import BrokerClient, BrokerLostError, backoff_delays
+from repro.ipc.faults import FaultPlan
 from repro.ipc.protocol import default_socket_path
 
 __all__ = [
     "NodeBroker",
     "BrokerClient",
     "BrokerError",
+    "BrokerLostError",
+    "FaultPlan",
     "ProcLease",
+    "backoff_delays",
     "default_socket_path",
 ]

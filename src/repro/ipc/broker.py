@@ -16,7 +16,19 @@ across jobs — literally with the same machinery (``repro.core.lease``):
 * liveness is **heartbeat-based**: a worker that dies abruptly is
   detected by socket EOF (immediate) or by missed heartbeats (wedged
   process with an open socket) and its lease is reclaimed — the
-  survivors' grants grow within one reaping pass.
+  survivors' grants grow within one reaping pass;
+* grants are **fenced**: every broker start mints a fresh ``incarnation``
+  id, carried on the ``welcome`` handshake and on every grant alongside
+  the monotonic grant ``epoch``. Clients drop grants from a stale
+  (incarnation, epoch) pair, so a grant racing a reconnect can never act
+  on a dead broker's authority. A restarted broker takes over the
+  rendezvous path (stale socket files are probed and reclaimed) and
+  rebuilds its lease table purely from the workers' re-registrations;
+* delivery is **self-healing**: the current grant also rides every
+  heartbeat ack, so a lost grant push heals within one heartbeat
+  interval, and a heartbeat from an unregistered connection (its
+  ``register`` was lost) drops the connection — the worker's reconnect
+  loop re-registers it.
 
 The broker runs as a thread in a designated process (``NodeBroker(...).
 start()``) or standalone (``python -m repro.ipc.broker``). It needs no
@@ -104,6 +116,10 @@ class NodeBroker:
         if self.capacity <= 0:
             raise BrokerError(f"capacity must be positive, got {self.capacity}")
         self.heartbeat_timeout = float(heartbeat_timeout)
+        #: per-start incarnation id: the fencing token carried on every
+        #: grant — a restarted broker can never be mistaken for its
+        #: predecessor by a reconnecting client
+        self.incarnation = f"{os.getpid():x}.{os.urandom(6).hex()}"
         self._table = LeaseTable(self.capacity)
         self._lock = threading.Lock()
         self._sel: Optional[selectors.BaseSelector] = None
@@ -260,6 +276,16 @@ class NodeBroker:
         if lease is not None:
             lease.last_beat = time.monotonic()
         if op == "register":
+            # the fencing handshake: the client adopts this incarnation
+            # and epoch watermark before any grant of ours is applied
+            try:
+                send_msg(conn, {"op": "welcome",
+                                "incarnation": self.incarnation,
+                                "epoch": self._epoch,
+                                "capacity": self.capacity})
+            except OSError:
+                self._drop(conn, cell, reclaim=lease is not None)
+                return
             with self._lock:
                 if lease is None:
                     lease = ProcLease(
@@ -278,7 +304,19 @@ class NodeBroker:
                     lease.want = max(1, int(msg.get("slots", lease.want)))
                 self._regrant()
         elif op == "heartbeat":
-            pass  # last_beat already refreshed
+            if lease is None:
+                # register precedes heartbeats; a heartbeat from an
+                # unregistered connection means the register was lost.
+                # Drop the connection: the worker's reconnect loop
+                # re-registers it (self-healing, never a silent limbo).
+                self._drop(conn, cell, reclaim=False)
+            else:
+                # the current grant rides the ack (idempotent refresh):
+                # a lost grant push heals within one heartbeat interval
+                try:
+                    send_msg(conn, self._grant_msg(lease, len(self._table)))
+                except OSError:
+                    self._drop(conn, cell, reclaim=True)
         elif op == "resize":
             if lease is not None:
                 with self._lock:
@@ -381,14 +419,7 @@ class NodeBroker:
         self._epoch += 1
         for e in entries:
             try:
-                send_msg(e.conn, {
-                    "op": "grant",
-                    "slots": e.granted,
-                    "quota": e.quota,
-                    "capacity": self.capacity,
-                    "workers": len(entries),
-                    "epoch": self._epoch,
-                })
+                send_msg(e.conn, self._grant_msg(e, len(entries)))
             except OSError:
                 # a client not draining its socket (wedged) or already
                 # gone: grants are tiny, so a full buffer means hundreds
@@ -397,6 +428,17 @@ class NodeBroker:
                 # performs it outside this lock.
                 self._dead_conns.append(e.conn)
 
+    def _grant_msg(self, e: ProcLease, n_workers: int) -> dict:
+        return {
+            "op": "grant",
+            "slots": e.granted,
+            "quota": e.quota,
+            "capacity": self.capacity,
+            "workers": n_workers,
+            "epoch": self._epoch,
+            "incarnation": self.incarnation,
+        }
+
     # ------------------------------------------------------------------ #
     # introspection
     # ------------------------------------------------------------------ #
@@ -404,6 +446,7 @@ class NodeBroker:
         with self._lock:
             return {
                 "capacity": self.capacity,
+                "incarnation": self.incarnation,
                 "epoch": self._epoch,
                 "registrations": self.registrations,
                 "reclaims": self.reclaims,

@@ -8,12 +8,25 @@ width at its tasks' next scheduling points (within one tick period for
 preemptive policies), a *grant* unparks and refills immediately.
 
 Failure semantics (the paper's pure-user-space stance: coordination is an
-optimization, never a liveness dependency):
+optimization, never a liveness dependency — and since PR 6, the system
+*heals*, it does not merely survive):
 
-* if the broker dies mid-run, the client detects it (EOF or send failure)
-  and **degrades to free-running**: the bound runtime's width is restored
-  to its full topology and the process continues uncoordinated — it never
-  hangs on a dead coordinator;
+* losing the broker (EOF, send failure, reset) **degrades the worker to
+  free-running immediately** — full local width, never a hang — and then
+  runs a reconnect loop with exponential backoff + jitter. On reconnect
+  the client re-registers under the same name/share/demand and resumes
+  coordination: the failure is a transient
+  ``COORDINATED → DEGRADED → RECONNECTING → COORDINATED`` state machine,
+  not a terminal flag (``reconnect=False`` restores the PR 5 terminal
+  degrade);
+* lease ops on a lost broker raise a typed ``BrokerLostError`` — never a
+  hang. The share change is still recorded locally and carried by the
+  next re-registration (queued-or-rejected, at the caller's option);
+* grants are **epoch-fenced**: every grant carries the broker's
+  per-start ``incarnation`` and a monotonic ``epoch``; grants from a
+  stale incarnation, or out-of-order within one, are dropped
+  (``stale_grants_dropped``) — a grant racing a reconnect can never
+  shrink this worker on a dead broker's authority;
 * grants are floored at one slot when applied to a runtime, so a miserly
   apportionment can throttle a process but never starve it.
 """
@@ -21,11 +34,42 @@ optimization, never a liveness dependency):
 from __future__ import annotations
 
 import os
+import random
 import socket
 import threading
-from typing import Callable, Optional
+import time
+from typing import Callable, Iterator, Optional
 
+from repro.ipc import faults as _faults
 from repro.ipc.protocol import ProtocolError, recv_msg, send_msg
+
+
+class BrokerLostError(ConnectionError):
+    """A lease op reached a lost broker. Subclasses ``ConnectionError``
+    (hence ``OSError``) so pre-typed callers keep working. Carries the
+    client's failure-machine state at raise time."""
+
+    def __init__(self, message: str, *, client: "BrokerClient" = None):
+        super().__init__(message)
+        self.client_name = None if client is None else client.name
+        self.client_state = None if client is None else client.state
+        self.degraded = False if client is None else client.degraded
+        self.last_grant = None if client is None else client.granted
+
+
+def backoff_delays(base: float = 0.05, cap: float = 2.0, *,
+                   factor: float = 2.0, jitter: float = 0.5,
+                   rng: Optional[random.Random] = None) -> Iterator[float]:
+    """Exponential backoff with jitter: yields ``0`` first (immediate
+    first attempt), then ``base``, ``base*factor``, … capped at ``cap``,
+    each inflated by up to ``jitter`` uniformly — co-located workers
+    reconnecting to a restarted broker must not stampede in lockstep."""
+    rng = rng or random.Random()
+    yield 0.0
+    delay = base
+    while True:
+        yield delay * (1.0 + jitter * rng.random())
+        delay = min(cap, delay * factor)
 
 
 class BrokerClient:
@@ -40,37 +84,70 @@ class BrokerClient:
                          (default: the bound runtime's topology width, or 1).
     heartbeat_interval:  seconds between heartbeats (keep well under the
                          broker's ``heartbeat_timeout``).
+    reconnect:           heal after a broker loss (default). ``False`` is
+                         the legacy terminal degrade: free-running forever.
+    reconnect_backoff:   ``(base, cap)`` seconds for the backoff helper.
+    reconnect_timeout:   give up reconnecting after this many seconds of
+                         one continuous outage (None: keep trying forever).
     on_grant:            callback ``(slots:int) -> None`` for pushed grants.
     on_disconnect:       callback ``() -> None`` when the broker is lost.
+    on_reconnect:        callback ``() -> None`` after a successful rejoin.
+    faults:              optional ``repro.ipc.faults.FaultPlan`` wrapped
+                         around this client's protocol send/recv layer.
     """
+
+    #: failure-machine states
+    CONNECTING = "connecting"
+    COORDINATED = "coordinated"
+    DEGRADED = "degraded"
+    RECONNECTING = "reconnecting"
+    STOPPED = "stopped"
 
     def __init__(self, path: str, *, name: str = "worker",
                  share: float = 1.0, slots: Optional[int] = None,
                  heartbeat_interval: float = 0.2,
+                 reconnect: bool = True,
+                 reconnect_backoff: tuple = (0.05, 2.0),
+                 reconnect_timeout: Optional[float] = None,
                  on_grant: Optional[Callable[[int], None]] = None,
-                 on_disconnect: Optional[Callable[[], None]] = None):
+                 on_disconnect: Optional[Callable[[], None]] = None,
+                 on_reconnect: Optional[Callable[[], None]] = None,
+                 faults=None):
         self.path = path
         self.name = name
         self.share = float(share)
         self.slots = slots
         self.heartbeat_interval = float(heartbeat_interval)
+        self.reconnect = bool(reconnect)
+        self.reconnect_backoff = reconnect_backoff
+        self.reconnect_timeout = reconnect_timeout
         self.on_grant = on_grant
         self.on_disconnect = on_disconnect
+        self.on_reconnect = on_reconnect
+        self._faults = faults
+        self._rng = random.Random()
         self._runtime = None
         self._sock: Optional[socket.socket] = None
         self._send_lock = threading.Lock()
-        self._recv_thread: Optional[threading.Thread] = None
+        self._io_thread: Optional[threading.Thread] = None
         self._beat_thread: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
         self._first_grant = threading.Event()
-        self._degrade_once = threading.Lock()
-        #: the last pushed grant (node slots), None before the first one
+        self.state = self.CONNECTING
+        #: the last applied grant (node slots), None before the first one
         self.granted: Optional[int] = None
+        #: monotonic fence within the adopted incarnation
         self.grant_epoch = 0
-        #: True once the broker was lost and this worker fell back to
-        #: free-running (full local width, no coordination)
+        #: the broker incarnation this client last coordinated under
+        self.incarnation: Optional[str] = None
+        self._conn_incarnation: Optional[str] = None
+        #: True while the broker is lost (cleared by a successful rejoin)
         self.degraded = False
         self.connected = False
+        #: lifetime counters (introspection / chaos assertions)
+        self.outages = 0
+        self.reconnects = 0
+        self.stale_grants_dropped = 0
 
     # ------------------------------------------------------------------ #
     # wiring
@@ -90,26 +167,35 @@ class BrokerClient:
     # lifecycle
     # ------------------------------------------------------------------ #
     def start(self, *, connect_timeout: float = 5.0) -> "BrokerClient":
-        """Connect, register, and start the receiver/heartbeat threads."""
-        if self._sock is not None:
+        """Connect, register, and start the receiver/heartbeat threads.
+
+        The initial connect retries with the same backoff helper the
+        reconnect loop uses (a client racing broker startup — e.g. a
+        gateway's server processes — settles instead of raising), bounded
+        by the ``connect_timeout`` deadline; the last ``OSError`` is
+        re-raised when the deadline passes."""
+        if self._io_thread is not None:
             raise RuntimeError("client already started")
-        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        sock.settimeout(connect_timeout)
-        sock.connect(self.path)
-        sock.settimeout(None)
-        self._sock = sock
-        self.connected = True
-        self._send({
-            "op": "register",
-            "name": self.name,
-            "share": self.share,
-            "slots": int(self.slots or 1),
-            "pid": os.getpid(),
-        })
-        self._recv_thread = threading.Thread(
-            target=self._recv_main, name=f"usf-broker-recv-{self.name}",
+        deadline = time.monotonic() + float(connect_timeout)
+        base, cap = self.reconnect_backoff
+        last: Optional[OSError] = None
+        for delay in backoff_delays(base, cap, rng=self._rng):
+            if last is not None and time.monotonic() + delay >= deadline:
+                raise last
+            if self._stop_evt.wait(delay):
+                raise BrokerLostError("client stopped during connect",
+                                      client=self)
+            try:
+                self._connect_and_register(
+                    attempt_timeout=max(0.1, deadline - time.monotonic()))
+                break
+            except OSError as e:
+                last = e
+        self.state = self.COORDINATED
+        self._io_thread = threading.Thread(
+            target=self._session_main, name=f"usf-broker-io-{self.name}",
             daemon=True)
-        self._recv_thread.start()
+        self._io_thread.start()
         self._beat_thread = threading.Thread(
             target=self._beat_main, name=f"usf-broker-beat-{self.name}",
             daemon=True)
@@ -124,33 +210,30 @@ class BrokerClient:
                 self._send({"op": "deregister"})
             except OSError:
                 pass
-        sock = self._sock
-        if sock is not None:
-            try:
-                sock.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
-            try:
-                sock.close()
-            except OSError:
-                pass
-        for t in (self._recv_thread, self._beat_thread):
+        self._sever(self._sock)
+        for t in (self._io_thread, self._beat_thread):
             if t is not None and t is not threading.current_thread():
                 t.join(timeout)
         self.connected = False
+        self.state = self.STOPPED
 
     # ------------------------------------------------------------------ #
     # lease ops (cross-process twins of SlotLease.resize / apply_rescale)
     # ------------------------------------------------------------------ #
     def resize(self, share: float) -> None:
-        """Set this process's node share (elastic cross-process lease)."""
+        """Set this process's node share (elastic cross-process lease).
+
+        On a lost broker this raises ``BrokerLostError`` — but the new
+        share is already recorded locally, so the next re-registration
+        carries it (queued-or-rejected, never a hang)."""
         self.share = float(share)
         self._send({"op": "resize", "share": self.share})
 
     def rescale(self, scale: float) -> None:
         """Multiply this process's node share by ``scale`` — the
         ``MeshRescaleEvent`` routing: a process that lost half its devices
-        surrenders half its node-slot share to co-located processes."""
+        surrenders half its node-slot share to co-located processes. Same
+        queued-or-rejected semantics as ``resize`` on a lost broker."""
         self.share *= float(scale)
         self._send({"op": "rescale", "scale": float(scale)})
 
@@ -161,62 +244,170 @@ class BrokerClient:
         return self.granted
 
     # ------------------------------------------------------------------ #
-    # internals
+    # connection internals
     # ------------------------------------------------------------------ #
+    def _connect_and_register(self, *, attempt_timeout: float = 1.0) -> None:
+        """One connect + register attempt (start() and the reconnect loop
+        both come through here). Raises ``OSError`` on failure."""
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(attempt_timeout)
+        try:
+            sock.connect(self.path)
+        except OSError:
+            sock.close()
+            raise
+        sock.settimeout(None)
+        with self._send_lock:
+            self._sock = sock
+            self._conn_incarnation = None  # adopt the peer's on welcome
+            try:
+                self._raw_send(sock, {
+                    "op": "register",
+                    "name": self.name,
+                    "share": self.share,
+                    "slots": int(self.slots or 1),
+                    "pid": os.getpid(),
+                })
+            except OSError:
+                self._sock = None
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                raise
+        self.connected = True
+
+    def _raw_send(self, sock: socket.socket, msg: dict) -> None:
+        """Frame and send one message through the fault layer (caller
+        holds ``_send_lock``)."""
+        if self._faults is not None:
+            act, delay = self._faults.send_action(msg)
+            if delay > 0.0:
+                time.sleep(delay)
+            if act == _faults.DROP:
+                return
+            if act == _faults.TRUNCATE:
+                try:
+                    sock.sendall(_faults.truncated_frame())
+                except OSError:
+                    pass
+                raise OSError("injected fault: truncated frame")
+            if act == _faults.RESET:
+                raise OSError("injected fault: connection reset")
+        send_msg(sock, msg)
+
     def _send(self, msg: dict) -> None:
         sock = self._sock
-        if sock is None:
-            raise OSError("not connected")
+        if sock is None or not self.connected:
+            raise BrokerLostError(
+                f"broker lost ({self.state}): {msg.get('op')} not delivered"
+                " — lease state is queued for the next re-registration",
+                client=self)
         try:
             with self._send_lock:
-                send_msg(sock, msg)
-        except OSError:
+                self._raw_send(sock, msg)
+        except OSError as e:
             # an intentional stop() must not masquerade as a broker loss:
-            # no degrade flag, no on_disconnect, no width restore on a
-            # runtime that is being torn down anyway
+            # no degrade, no reconnect, no width restore on a runtime that
+            # is being torn down anyway
             if not self._stop_evt.is_set():
-                self._degrade()
-            raise
+                self._sever(sock)  # the session thread runs the outage
+            if isinstance(e, BrokerLostError):
+                raise
+            raise BrokerLostError(
+                f"broker lost mid-send: {e}", client=self) from e
 
-    def _recv_main(self) -> None:
+    def _sever(self, sock: Optional[socket.socket]) -> None:
+        """Kill the current connection; the session thread's recv wakes
+        with an error and drives the degrade/reconnect machinery."""
+        if sock is None:
+            return
+        try:
+            sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    # ------------------------------------------------------------------ #
+    # the failure state machine (session thread)
+    # ------------------------------------------------------------------ #
+    def _session_main(self) -> None:
+        while not self._stop_evt.is_set():
+            self._recv_loop()
+            if self._stop_evt.is_set():
+                break
+            self._on_outage()
+            if not self.reconnect:
+                # legacy terminal degrade: free-running forever
+                self._stop_evt.set()
+                break
+            if not self._reconnect_loop():
+                break
+
+    def _recv_loop(self) -> None:
+        """Serve one connection until it is lost (returns on loss)."""
         sock = self._sock
+        if sock is None:
+            return
         while not self._stop_evt.is_set():
             try:
                 msg = recv_msg(sock)
             except (OSError, ProtocolError, ValueError):
                 msg = None
-            if msg is None:  # broker gone (EOF) or socket error
-                if not self._stop_evt.is_set():
-                    self._degrade()
+            if msg is None:  # broker gone (EOF) or socket/stream error
                 return
-            if msg.get("op") == "grant":
-                self.granted = int(msg["slots"])
-                self.grant_epoch = int(msg.get("epoch", self.grant_epoch + 1))
-                self._apply_grant(self.granted)
-                self._first_grant.set()
+            if self._faults is not None:
+                act, delay, msgs = self._faults.recv_actions(msg)
+                if delay > 0.0:
+                    time.sleep(delay)
+                if act == _faults.RESET:
+                    self._sever(sock)
+                    return
+                for m in msgs:
+                    self._dispatch(m)
+            else:
+                self._dispatch(msg)
 
-    def _beat_main(self) -> None:
-        while not self._stop_evt.wait(self.heartbeat_interval):
-            try:
-                self._send({"op": "heartbeat"})
-            except OSError:
-                return  # _send already degraded us
+    def _dispatch(self, msg: dict) -> None:
+        op = msg.get("op")
+        if op == "welcome":
+            self._adopt(msg.get("incarnation"), int(msg.get("epoch", 0)))
+        elif op == "grant":
+            inc = msg.get("incarnation")
+            if inc is not None:
+                if self._conn_incarnation is None:
+                    # no welcome seen (dropped, or a pre-fencing broker):
+                    # adopt the first grant's incarnation
+                    self._adopt(inc, int(msg.get("epoch", 1)) - 1)
+                elif inc != self._conn_incarnation:
+                    # a dead broker's authority can never shrink us
+                    self.stale_grants_dropped += 1
+                    return
+            epoch = int(msg.get("epoch", self.grant_epoch + 1))
+            if epoch < self.grant_epoch:
+                self.stale_grants_dropped += 1  # reordered: fence it
+                return
+            self.grant_epoch = epoch  # == is an idempotent refresh
+            self.granted = int(msg["slots"])
+            self._apply_grant(self.granted)
+            self._first_grant.set()
+        # snapshot replies and unknown ops are ignored (forward compat)
 
-    def _apply_grant(self, slots: int) -> None:
-        if self._runtime is not None:
-            # liveness floor: a zero grant throttles to one slot, never to
-            # a dead stop (the runtime applies the same floor)
-            self._runtime.set_slot_target(max(1, slots))
-        if self.on_grant is not None:
-            self.on_grant(slots)
+    def _adopt(self, incarnation: Optional[str], epoch: int) -> None:
+        self._conn_incarnation = incarnation
+        self.incarnation = incarnation
+        self.grant_epoch = epoch
 
-    def _degrade(self) -> None:
-        """Broker lost: fall back to free-running exactly once."""
-        if not self._degrade_once.acquire(blocking=False):
-            return
-        self.degraded = True
+    def _on_outage(self) -> None:
+        """Broker lost: degrade to free-running *immediately*; healing
+        (or not, with ``reconnect=False``) happens after."""
+        self.outages += 1
         self.connected = False
-        self._stop_evt.set()
+        self.degraded = True
+        self.state = self.DEGRADED
         self._first_grant.set()  # unblock wait_grant callers
         if self._runtime is not None:
             try:
@@ -225,6 +416,54 @@ class BrokerClient:
                 pass
         if self.on_disconnect is not None:
             self.on_disconnect()
+
+    def _reconnect_loop(self) -> bool:
+        """Retry the broker with backoff + jitter until rejoined (True),
+        stopped, or the ``reconnect_timeout`` outage budget is spent."""
+        self.state = self.RECONNECTING
+        base, cap = self.reconnect_backoff
+        deadline = (None if self.reconnect_timeout is None
+                    else time.monotonic() + self.reconnect_timeout)
+        for delay in backoff_delays(base, cap, rng=self._rng):
+            if deadline is not None and time.monotonic() + delay > deadline:
+                self.state = self.DEGRADED  # outage budget spent: stay free
+                self._stop_evt.set()
+                return False
+            if self._stop_evt.wait(delay):
+                return False
+            try:
+                self._connect_and_register()
+            except OSError:
+                continue
+            self.degraded = False
+            self.state = self.COORDINATED
+            self.reconnects += 1
+            if self.on_reconnect is not None:
+                self.on_reconnect()
+            return True
+        return False  # pragma: no cover - backoff iterator is infinite
+
+    # ------------------------------------------------------------------ #
+    # heartbeats
+    # ------------------------------------------------------------------ #
+    def _beat_main(self) -> None:
+        while not self._stop_evt.wait(self.heartbeat_interval):
+            if not self.connected:
+                continue  # outage: the session thread is reconnecting
+            if self._faults is not None and self._faults.stall_heartbeat():
+                continue
+            try:
+                self._send({"op": "heartbeat"})
+            except OSError:
+                continue  # loss is handled by the session thread
+
+    def _apply_grant(self, slots: int) -> None:
+        if self._runtime is not None:
+            # liveness floor: a zero grant throttles to one slot, never to
+            # a dead stop (the runtime applies the same floor)
+            self._runtime.set_slot_target(max(1, slots))
+        if self.on_grant is not None:
+            self.on_grant(slots)
 
     def __enter__(self) -> "BrokerClient":
         return self

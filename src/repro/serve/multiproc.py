@@ -16,10 +16,21 @@ Request fan-out/fan-in crosses process boundaries over multiprocessing
 queues; *slot* coordination crosses them over the broker's Unix socket.
 Each server registers a nice-derived (or explicit) node share, so the
 paper's gateway-nice-0 / servers-nice-20 priority story scales from jobs
-to processes unchanged. A server killed mid-flight is reclaimed by the
-broker (its node slots flow to the survivors) and surfaced to the caller
-as a ``ServerProcessError`` instead of a hang; a dead broker degrades
-every server to free-running.
+to processes unchanged.
+
+Failure/recovery (``supervise=True``, the default): the gateway
+*supervises* its server processes — a dead ``ServerProcess`` is
+restarted with capped exponential backoff, a crash loop (more than
+``max_restarts`` deaths inside ``restart_window`` seconds) opens a
+circuit breaker that marks the slot failed (surfaced in ``snapshot()``)
+while requests keep routing to the survivors, and a request in flight on
+a dying server is retried once on a survivor before a
+``ServerProcessError`` surfaces. ``supervise=False`` is the unsupervised
+PR 5 behavior: a dead server raises at the caller and stays dead. Either
+way a dead server's node lease is reclaimed by the broker (its slots
+flow to the survivors) and a dead broker degrades every server to
+free-running — then heals: the server-side ``BrokerClient`` reconnects
+with backoff once a broker is back on the rendezvous path.
 """
 
 from __future__ import annotations
@@ -27,6 +38,7 @@ from __future__ import annotations
 import multiprocessing as mp
 import os
 import queue as queue_mod
+import threading
 import time
 from typing import Any, Optional
 
@@ -102,7 +114,14 @@ def _server_main(spec: dict, req_q, resp_q) -> None:
 
 
 class ServerProcess:
-    """Parent-side handle of one model-server process."""
+    """Parent-side handle of one model-server process.
+
+    Restartable: ``restart()`` respawns a dead child on *fresh* queues
+    (in-flight items on the old queues die with the old process) and
+    bumps ``generation`` so a caller blocked on the old response stream
+    surfaces a ``ServerProcessError`` instead of waiting on a queue
+    nobody will ever fill. ``failed`` is the crash-loop circuit breaker
+    flag (set by the supervising gateway, surfaced in snapshots)."""
 
     def __init__(self, name: str, arch: str, *,
                  broker_path: Optional[str] = None,
@@ -128,6 +147,15 @@ class ServerProcess:
         self._proc: Optional[Any] = None
         self._rid = 0
         self.served = 0
+        #: bumped on every (re)spawn; result() fences on it
+        self.generation = 0
+        #: lifetime restarts performed on this slot
+        self.restarts = 0
+        #: circuit breaker: True once the slot crash-looped and was
+        #: permanently benched (requests route to survivors only)
+        self.failed = False
+        #: monotonic stamps of observed deaths (the breaker's window)
+        self.fail_times: list = []
 
     def start(self, *, ready_timeout: float = 180.0) -> "ServerProcess":
         self._proc = _CTX.Process(
@@ -139,6 +167,19 @@ class ServerProcess:
         if not msg.get("ready"):
             raise ServerProcessError(f"{self.name} failed to start: {msg}")
         return self
+
+    def restart(self, *, ready_timeout: float = 180.0) -> "ServerProcess":
+        """Respawn a dead server on fresh queues (supervision path)."""
+        old = self._proc
+        if old is not None and old.is_alive():
+            raise ServerProcessError(f"{self.name} is alive; not restarting")
+        if old is not None:
+            old.join(0.0)
+        self._req_q = _CTX.Queue()
+        self._resp_q = _CTX.Queue()
+        self.generation += 1
+        self.restarts += 1
+        return self.start(ready_timeout=ready_timeout)
 
     @property
     def pid(self) -> Optional[int]:
@@ -161,12 +202,19 @@ class ServerProcess:
 
     def _next_resp(self, timeout: Optional[float]) -> dict:
         deadline = None if timeout is None else time.monotonic() + timeout
+        gen = self.generation
+        resp_q = self._resp_q
         while True:
             step = 0.5 if deadline is None else max(
                 0.0, min(0.5, deadline - time.monotonic()))
             try:
-                msg = self._resp_q.get(timeout=step)
+                msg = resp_q.get(timeout=step)
             except queue_mod.Empty:
+                if self.generation != gen:
+                    # the supervisor restarted the child under us: the
+                    # old response stream is dead, surface it
+                    raise ServerProcessError(
+                        f"server process {self.name} restarted mid-request")
                 if not self.alive():
                     raise ServerProcessError(
                         f"server process {self.name} (pid={self.pid}) died")
@@ -193,7 +241,7 @@ class ServerProcess:
 
 
 class MultiProcessGateway:
-    """Fans each request out to every server process and joins the
+    """Fans each request out to every live server process and joins the
     responses (the cross-process twin of ``serve.engine.Gateway``).
 
     With ``coordinate=True`` (default) the gateway hosts the designated
@@ -201,13 +249,25 @@ class MultiProcessGateway:
     the co-located servers split the node by share instead of
     oversubscribing it. ``coordinate=False`` is the free-running Linux
     baseline: same processes, no slot coordination.
+
+    With ``supervise=True`` (default) the gateway is *self-healing*: a
+    supervisor thread restarts dead servers with capped exponential
+    backoff (``restart_backoff``), opens a crash-loop circuit breaker
+    after ``max_restarts`` deaths within ``restart_window`` seconds
+    (slot marked ``failed``, surfaced by ``snapshot()``, routed around),
+    and ``handle`` retries a request lost to a dying server once on a
+    survivor. ``supervise=False`` restores the PR 5 fail-fast behavior.
     """
 
     def __init__(self, archs: dict[str, str], *, coordinate: bool = True,
                  node_capacity: Optional[int] = None,
                  slots_per_server: int = 2, shares: Optional[dict] = None,
                  max_batch: int = 2, max_len: int = 32, smoke: bool = True,
-                 heartbeat_timeout: float = 1.0):
+                 heartbeat_timeout: float = 1.0,
+                 supervise: bool = True, max_restarts: int = 3,
+                 restart_window: float = 30.0,
+                 restart_backoff: tuple = (0.5, 8.0),
+                 poll_interval: float = 0.2):
         self.broker: Optional[NodeBroker] = None
         broker_path = None
         if coordinate:
@@ -221,33 +281,134 @@ class MultiProcessGateway:
                           max_batch=max_batch, max_len=max_len, smoke=smoke)
             for name, arch in archs.items()
         ]
+        self.supervise = bool(supervise)
+        self.max_restarts = int(max_restarts)
+        self.restart_window = float(restart_window)
+        self.restart_backoff = restart_backoff
+        self._poll_interval = float(poll_interval)
+        self._ready_timeout = 180.0
+        self._stop_evt = threading.Event()
+        self._supervisor: Optional[threading.Thread] = None
         self.responses: list[dict] = []
 
     def start(self, *, ready_timeout: float = 180.0) -> "MultiProcessGateway":
+        self._ready_timeout = float(ready_timeout)
         for s in self.servers:
             s.start(ready_timeout=ready_timeout)
+        if self.supervise:
+            self._supervisor = threading.Thread(
+                target=self._supervise_main, name="usf-gateway-supervisor",
+                daemon=True)
+            self._supervisor.start()
         return self
+
+    # ------------------------------------------------------------------ #
+    # supervision (restart + crash-loop circuit breaker)
+    # ------------------------------------------------------------------ #
+    def _supervise_main(self) -> None:
+        while not self._stop_evt.wait(self._poll_interval):
+            for s in self.servers:
+                if s.failed or s._proc is None or s.alive():
+                    continue
+                now = time.monotonic()
+                s.fail_times.append(now)
+                s.fail_times[:] = [t for t in s.fail_times
+                                   if now - t <= self.restart_window]
+                if len(s.fail_times) > self.max_restarts:
+                    # crash loop: open the breaker — stop burning the
+                    # node respawning it, keep routing to survivors
+                    s.failed = True
+                    continue
+                base, cap = self.restart_backoff
+                delay = min(cap, base * (2 ** (len(s.fail_times) - 1)))
+                if self._stop_evt.wait(delay):
+                    return
+                try:
+                    s.restart(ready_timeout=self._ready_timeout)
+                except Exception:  # noqa: BLE001
+                    # the respawn itself crashed (e.g. still-broken
+                    # config): the dead child is counted at the next
+                    # poll, converging on the breaker
+                    pass
+
+    def _targets(self) -> list:
+        if not self.supervise:
+            return list(self.servers)
+        return [s for s in self.servers if not s.failed and s.alive()]
 
     def handle(self, tokens, max_new: int = 4,
                timeout: Optional[float] = None) -> dict:
-        """Submit to every server process, wait for all responses."""
+        """Submit to every live server process, wait for all responses.
+
+        Under supervision, a request lost to a dying server is retried
+        once on a surviving server before ``ServerProcessError``
+        surfaces; the stand-in's answer is recorded under the dead
+        server's key with a ``retried_on`` marker."""
         t0 = time.monotonic()
-        for s in self.servers:
+        targets = self._targets()
+        if not targets:
+            raise ServerProcessError("no live server processes")
+
+        def left() -> Optional[float]:
+            return None if timeout is None else max(
+                0.0, timeout - (time.monotonic() - t0))
+
+        for s in targets:
             s.submit(tokens, max_new)
         per_server = {}
-        for s in self.servers:
-            left = None if timeout is None else max(
-                0.0, timeout - (time.monotonic() - t0))
-            per_server[s.name] = s.result(timeout=left)
+        dead = []
+        for s in targets:
+            try:
+                per_server[s.name] = s.result(timeout=left())
+            except ServerProcessError:
+                if not self.supervise:
+                    raise
+                dead.append(s)
+        for s in dead:
+            survivors = [t for t in targets
+                         if t is not s and t.name in per_server and t.alive()]
+            if not survivors:
+                raise ServerProcessError(
+                    f"{s.name} died mid-request and no survivor could "
+                    "retry it")
+            stand_in = survivors[0]
+            stand_in.submit(tokens, max_new)
+            retried = dict(stand_in.result(timeout=left()))
+            retried["retried_on"] = stand_in.name
+            per_server[s.name] = retried
         rec = {
             "latency": time.monotonic() - t0,
             "per_server": {n: r["latency"] for n, r in per_server.items()},
             "outputs": {n: r["output"] for n, r in per_server.items()},
+            "retried": {n: r["retried_on"] for n, r in per_server.items()
+                        if "retried_on" in r},
         }
         self.responses.append(rec)
         return rec
 
+    def snapshot(self) -> dict:
+        """Supervision + coordination state: per-server liveness,
+        restart counts, breaker flags — and the broker's lease table."""
+        out = {
+            "supervise": self.supervise,
+            "servers": {
+                s.name: {
+                    "alive": s.alive(),
+                    "pid": s.pid,
+                    "restarts": s.restarts,
+                    "failed": s.failed,
+                    "served": s.served,
+                } for s in self.servers
+            },
+        }
+        if self.broker is not None:
+            out["broker"] = self.broker.snapshot()
+        return out
+
     def stop(self) -> None:
+        self._stop_evt.set()
+        if self._supervisor is not None:
+            self._supervisor.join(10.0)
         for s in self.servers:
             s.stop()
         if self.broker is not None:

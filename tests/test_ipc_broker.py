@@ -245,6 +245,7 @@ def test_wedged_worker_reclaimed_by_heartbeat_timeout(broker):
         silent.connect(broker.path)
         send_msg(silent, {"op": "register", "name": "wedged",
                           "share": 1.0, "slots": 4, "pid": 0})
+        assert recv_msg(silent)["op"] == "welcome"
         assert recv_msg(silent)["op"] == "grant"
         assert _wait_until(lambda: survivor.granted == 2)
 
@@ -318,6 +319,7 @@ def test_malformed_message_drops_sender_not_broker(broker):
         bad.connect(broker.path)
         send_msg(bad, {"op": "register", "name": "bad", "share": 1.0,
                        "slots": 4, "pid": 0})
+        assert recv_msg(bad)["op"] == "welcome"
         assert recv_msg(bad)["op"] == "grant"
         assert _wait_until(lambda: survivor.granted == 2)
 
@@ -437,3 +439,157 @@ def test_client_start_against_missing_broker_raises():
     run free), it does not hang."""
     with pytest.raises(OSError):
         BrokerClient(_path(), name="w0").start(connect_timeout=1.0)
+
+
+# --------------------------------------------------------------------- #
+# self-healing: reconnect, broker restart, epoch fencing (PR 6)
+# --------------------------------------------------------------------- #
+def test_start_retries_until_broker_appears():
+    """start() no longer races broker startup: the initial connect
+    retries with the backoff helper inside the connect_timeout deadline,
+    so a worker launched before its broker settles instead of raising."""
+    path = _path()
+    res = {}
+
+    def connect():
+        c = BrokerClient(path, name="early", slots=4,
+                         heartbeat_interval=0.1,
+                         reconnect_backoff=(0.05, 0.2))
+        try:
+            c.start(connect_timeout=15.0)
+            res["grant"] = c.wait_grant(5.0)
+        finally:
+            c.stop()
+
+    t = threading.Thread(target=connect)
+    t.start()
+    time.sleep(0.4)  # the client is already in its retry loop
+    b = NodeBroker(path, capacity=4, heartbeat_timeout=0.6)
+    b.start()
+    try:
+        t.join(30.0)
+        assert not t.is_alive()
+        assert res.get("grant") == 4
+    finally:
+        b.stop()
+
+
+def test_broker_restart_workers_rejoin_shares_preserved():
+    """End-to-end heal: kill the broker -> workers degrade to full local
+    width immediately -> restart a broker on the same rendezvous path ->
+    workers re-register on their own and re-coordinate, shares (including
+    a lease op queued during the outage) preserved, under a fresh
+    incarnation — the lease table is rebuilt purely from
+    re-registrations."""
+    from repro.ipc import BrokerLostError
+
+    path = _path()
+    b1 = NodeBroker(path, capacity=4, heartbeat_timeout=0.6)
+    b1.start()
+    rt = UsfRuntime(Topology(4, 1), SchedCoop())
+    c1 = BrokerClient(path, name="w1", share=1.0, slots=4,
+                      heartbeat_interval=0.1,
+                      reconnect_backoff=(0.02, 0.2)).bind(rt).start()
+    c2 = BrokerClient(path, name="w2", share=3.0, slots=4,
+                      heartbeat_interval=0.1,
+                      reconnect_backoff=(0.02, 0.2)).start()
+    b2 = None
+    try:
+        assert _wait_until(lambda: c1.granted == 1 and c2.granted == 3)
+        assert rt.sched.slot_target() == 1
+        inc1 = c1.incarnation
+        assert inc1 == b1.incarnation
+
+        b1.stop()  # the coordinator vanishes (EOF to every worker)
+        assert _wait_until(lambda: c1.degraded and c2.degraded, timeout=5.0)
+        assert rt.sched.slot_target() == 4  # free-running immediately
+        assert c1.state in (BrokerClient.DEGRADED, BrokerClient.RECONNECTING)
+        # lease ops fail TYPED during the outage — and the share change
+        # is queued: the re-registration below carries share=2.0
+        with pytest.raises(BrokerLostError) as ei:
+            c1.resize(2.0)
+        assert ei.value.client_name == "w1"
+        assert ei.value.degraded is True
+        assert c1.share == 2.0
+
+        b2 = NodeBroker(path, capacity=4, heartbeat_timeout=0.6)
+        b2.start()
+        # workers rejoin on their own: apportion(4, [2.0, 3.0]) = [2, 2]
+        assert _wait_until(lambda: c1.state == BrokerClient.COORDINATED
+                           and c2.state == BrokerClient.COORDINATED,
+                           timeout=10.0)
+        assert _wait_until(lambda: c1.granted == 2 and c2.granted == 2,
+                           timeout=10.0)
+        assert _wait_until(lambda: rt.sched.slot_target() == 2, timeout=5.0)
+        assert not c1.degraded and not c2.degraded
+        # >= 1: the immediate first retry can land in the dying broker's
+        # accept backlog and count a spurious bounce before the real rejoin
+        assert c1.reconnects >= 1 and c2.reconnects >= 1
+        assert c1.incarnation == b2.incarnation != inc1
+        snap = b2.snapshot()
+        assert sorted(snap["workers"]) == ["w1", "w2"]
+        assert snap["workers"]["w1"]["share"] == 2.0
+    finally:
+        c1.stop()
+        c2.stop()
+        rt.shutdown(timeout=5.0)
+        if b2 is not None:
+            b2.stop()
+
+
+def test_reordered_grant_pair_is_fenced(broker):
+    """Satellite regression: a grant delivered out of order (via the
+    fault layer's reorder) is DROPPED by the monotonic (incarnation,
+    epoch) guard instead of rolling the worker back to a stale width."""
+    from repro.ipc import FaultPlan
+
+    # near-silent heartbeats: the only traffic is regrant-driven, so the
+    # reordered pair below is exactly the two membership regrants
+    c = BrokerClient(broker.path, name="w0", slots=4,
+                     heartbeat_interval=60.0).start()
+    sib = None
+    try:
+        assert c.wait_grant(5.0) == 4
+        plan = FaultPlan(seed=7, reorder_recv=1.0, horizon=1)
+        c._faults = plan
+        # grant A (sibling registers: c -> 2 slots) is held by the plan;
+        # grant B (sibling resize: c -> 1 slot) releases it -> [B, A]
+        sib = BrokerClient(broker.path, name="w1", slots=4,
+                           heartbeat_interval=60.0).start()
+        assert sib.wait_grant(5.0) is not None
+        sib.resize(3.0)
+        assert _wait_until(lambda: c.stale_grants_dropped >= 1, timeout=5.0)
+        assert plan.injected["reorder_recv"] == 1
+        # the newest grant (1 slot) won; the stale one could not shrink
+        # nor regrow the worker after the fact
+        assert c.granted == 1
+        assert c.grant_epoch == broker.snapshot()["epoch"]
+    finally:
+        c.stop()
+        if sib is not None:
+            sib.stop()
+
+
+def test_legacy_terminal_degrade_still_available():
+    """reconnect=False restores the PR 5 contract: a broker loss is a
+    terminal free-running degrade — no reconnect attempts ever."""
+    path = _path()
+    b = NodeBroker(path, capacity=4, heartbeat_timeout=0.6)
+    b.start()
+    c = BrokerClient(path, name="w0", slots=4, heartbeat_interval=0.1,
+                     reconnect=False).start()
+    b2 = None
+    try:
+        assert c.wait_grant(5.0) == 4
+        b.stop()
+        assert _wait_until(lambda: c.degraded, timeout=5.0)
+        b2 = NodeBroker(path, capacity=4, heartbeat_timeout=0.6)
+        b2.start()
+        time.sleep(1.0)  # ample time a reconnecting client would need
+        assert c.degraded and c.reconnects == 0
+        assert c.state == BrokerClient.DEGRADED
+        assert len(b2.snapshot()["workers"]) == 0
+    finally:
+        c.stop()
+        if b2 is not None:
+            b2.stop()

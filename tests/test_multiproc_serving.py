@@ -39,14 +39,15 @@ def test_multiprocess_gateway_serves(coordinate):
 
 
 def test_dead_server_process_surfaces_not_hangs():
-    """A server process killed mid-flight raises ServerProcessError at the
-    caller (and, under coordination, its node lease is reclaimed)."""
+    """Unsupervised (the PR 5 fail-fast contract): a server process killed
+    mid-flight raises ServerProcessError at the caller (and, under
+    coordination, its node lease is reclaimed)."""
     from repro.serve.multiproc import MultiProcessGateway, ServerProcessError
 
     gw = MultiProcessGateway(
         {"srv-a": "smollm_360m", "srv-b": "qwen1_5_110b"},
         coordinate=True, node_capacity=2, slots_per_server=2,
-        max_batch=2, max_len=32, smoke=True)
+        max_batch=2, max_len=32, smoke=True, supervise=False)
     try:
         gw.start(ready_timeout=300.0)
         gw.handle([5, 6], max_new=2, timeout=300.0)  # warm + sane
@@ -65,5 +66,103 @@ def test_dead_server_process_surfaces_not_hangs():
                 break
             time.sleep(0.1)
         assert list(gw.broker.snapshot()["workers"]) == ["srv-b"]
+    finally:
+        gw.stop()
+
+
+# --------------------------------------------------------------------- #
+# supervision: restart, crash-loop breaker, in-flight retry (PR 6)
+# --------------------------------------------------------------------- #
+def _wait_until(cond, timeout, step=0.1):
+    import time
+
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(step)
+    return cond()
+
+
+def test_supervisor_restarts_dead_server_then_breaker_benches_crashloop():
+    """A killed server is respawned (capped backoff) and serves again; a
+    crash-looping server trips the circuit breaker — the slot is marked
+    failed in snapshots and requests keep routing to the survivors."""
+    from repro.serve.multiproc import MultiProcessGateway
+
+    gw = MultiProcessGateway(
+        {"srv-a": "smollm_360m", "srv-b": "qwen1_5_110b"},
+        coordinate=True, node_capacity=2, slots_per_server=2,
+        max_batch=2, max_len=32, smoke=True,
+        supervise=True, max_restarts=2, restart_window=600.0,
+        restart_backoff=(0.1, 0.4), poll_interval=0.1)
+    try:
+        gw.start(ready_timeout=300.0)
+        gw.handle([5, 6], max_new=2, timeout=300.0)  # warm + sane
+        victim = gw.servers[0]
+
+        # phase 1: heal — a dead server is restarted and serves again
+        victim._proc.kill()
+        assert _wait_until(lambda: victim.restarts >= 1 and victim.alive(),
+                           timeout=300.0)
+        rec = gw.handle([5, 6], max_new=2, timeout=300.0)
+        assert sorted(rec["outputs"]) == ["srv-a", "srv-b"]
+        assert rec["retried"] == {}
+        snap = gw.snapshot()
+        assert snap["servers"]["srv-a"]["restarts"] >= 1
+        assert snap["servers"]["srv-a"]["failed"] is False
+
+        # phase 2: crash loop — every respawn now dies during init, so
+        # the window fills and the breaker opens (slot benched, routed
+        # around), instead of burning the node respawning forever
+        victim.spec["arch"] = "no-such-arch"
+        victim._proc.kill()
+        assert _wait_until(lambda: victim.failed, timeout=300.0)
+        snap = gw.snapshot()
+        assert snap["servers"]["srv-a"]["failed"] is True
+        rec = gw.handle([5, 6], max_new=2, timeout=300.0)
+        assert list(rec["outputs"]) == ["srv-b"]  # survivors keep serving
+    finally:
+        gw.stop()
+
+
+def test_inflight_request_retried_once_on_survivor():
+    """A request in flight on a dying server is retried once on a
+    survivor and recorded under the dead server's key with a
+    ``retried_on`` marker, instead of surfacing ServerProcessError."""
+    from repro.serve.multiproc import MultiProcessGateway
+
+    # quiescent supervisor (long poll): the restart machinery must not
+    # race the deterministic in-flight window this test pins below
+    gw = MultiProcessGateway(
+        {"srv-a": "smollm_360m", "srv-b": "qwen1_5_110b"},
+        coordinate=True, node_capacity=2, slots_per_server=2,
+        max_batch=2, max_len=32, smoke=True,
+        supervise=True, poll_interval=60.0)
+    try:
+        gw.start(ready_timeout=300.0)
+        gw.handle([5, 6], max_new=2, timeout=300.0)  # warm + sane
+        victim = gw.servers[0]
+        victim._proc.kill()
+        victim._proc.join(30.0)
+        # pin the window: the gateway targets the (already dead) server
+        # exactly once more, so the submitted request is provably in
+        # flight on a dead process when the collector reaches it
+        forced = []
+        real_alive = victim.alive
+
+        def one_last_alive():
+            if not forced:
+                forced.append(1)
+                return True
+            return real_alive()
+
+        victim.alive = one_last_alive
+        try:
+            rec = gw.handle([5, 6], max_new=2, timeout=300.0)
+        finally:
+            victim.alive = real_alive
+        assert sorted(rec["outputs"]) == ["srv-a", "srv-b"]
+        assert rec["retried"] == {"srv-a": "srv-b"}
     finally:
         gw.stop()
