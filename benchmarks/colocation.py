@@ -30,6 +30,7 @@ import argparse
 import json
 import sys
 
+from benchmarks.common import summarize_latencies
 from repro.core import simtask as st
 from repro.core.events import SimExecutor
 from repro.core.policies import SchedCoop, SchedFair
@@ -70,7 +71,19 @@ def _run_cell(share_a: float, share_b: float, *, horizon: float,
     total = job_a.service_time + job_b.service_time
     preempt_a = sum(t.stats.preemptions for t in job_a.tasks)
     preempt_b = sum(t.stats.preemptions for t in job_b.tasks)
+    # per-task mean ready->dispatch wait: the grant-order latency each
+    # job's tasks actually saw under this split (same summary shape as
+    # the microservices / faults artifacts)
+    waits = {
+        name: summarize_latencies(
+            [t.stats.wait_time / t.stats.dispatches
+             for t in job.tasks if t.stats.dispatches],
+            prefix="wait_", round_to=6)
+        for name, job in (("coop", job_a), ("fair", job_b))
+    }
     return {
+        **{f"{name}_{k}": v for name, s in waits.items()
+           for k, v in s.items()},
         "share_a": share_a,
         "share_b": share_b,
         "quota_a": lease_a.quota,

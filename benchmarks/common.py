@@ -22,10 +22,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from typing import Iterable
+
 from repro.core import simtask as st
 from repro.core.events import SimExecutor
 from repro.core.policies import SchedCoop, SchedFair
 from repro.core.simtask import SimCosts
+from repro.core.stats import latency_summary
 from repro.core.task import Job, Task
 from repro.core.topology import node_topology
 
@@ -145,3 +148,23 @@ def outer_runtime(sim: SimExecutor, job: Job, work_items: list,
 
     return [sim.spawn(job, worker, name=f"{job.name}-w{i}")
             for i in range(n_workers)]
+
+
+def summarize_latencies(latencies: Iterable[float], *, prefix: str = "",
+                        round_to: Optional[int] = None) -> dict:
+    """One uniform latency summary for every benchmark artifact.
+
+    Every harness that reports a latency distribution (microservices,
+    colocation, faults, the open-arrival SLO sweep) goes through here so
+    the JSON artifacts carry one shape: n / mean / p50 / p95 / p99 / p999
+    / max, nearest-rank percentiles from ``repro.core.stats``. ``prefix``
+    is prepended to each key (``prefix="lat_"`` gives the microservices
+    grid's ``lat_p99`` shape); ``round_to`` rounds every float to that
+    many decimals (the faults harness's 4-decimal JSON)."""
+    s = latency_summary(list(latencies))
+    if round_to is not None:
+        s = {k: (round(v, round_to) if isinstance(v, float) else v)
+             for k, v in s.items()}
+    if prefix:
+        s = {f"{prefix}{k}": v for k, v in s.items()}
+    return s

@@ -34,6 +34,8 @@ import sys
 import tempfile
 import time
 
+from benchmarks.common import summarize_latencies
+
 _CTX = mp.get_context("spawn")
 
 CAPACITY = 4
@@ -55,13 +57,9 @@ def _wait_until(cond, timeout, what, step=0.005):
 
 
 def _stats(xs) -> dict:
-    xs = sorted(xs)
-    return {
-        "n": len(xs),
-        "mean": round(sum(xs) / len(xs), 4),
-        "p50": round(xs[len(xs) // 2], 4),
-        "max": round(xs[-1], 4),
-    }
+    # the shared benchmark summary (adds p95/p99/p999 over the old local
+    # n/mean/p50/max shape, same 4-decimal rounding)
+    return summarize_latencies(xs, round_to=4)
 
 
 # --------------------------------------------------------------------- #
@@ -204,10 +202,15 @@ def run_grant_convergence(events: int) -> dict:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--out", default="BENCH_faults.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_faults.json, or "
+                         "BENCH_faults.smoke.json with --smoke so a smoke "
+                         "run never clobbers the committed artifact)")
     ap.add_argument("--smoke", action="store_true",
                     help="fewer repetitions: proves the machinery")
     args = ap.parse_args(argv)
+    out = args.out or ("BENCH_faults.smoke.json" if args.smoke
+                       else "BENCH_faults.json")
     reps = 2 if args.smoke else 5
     events = 6 if args.smoke else 20
 
@@ -228,10 +231,10 @@ def main(argv=None) -> int:
             "grant_convergence": conv,
         },
     }
-    with open(args.out, "w") as f:
+    with open(out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
-    print(f"wrote {args.out}")
+    print(f"wrote {out}")
     return 0
 
 

@@ -45,11 +45,15 @@ from benchmarks.common import (
     inner_region,
     make_executor,
     stack_policy,
+    summarize_latencies,
 )
 from repro.core import simtask as st
-from repro.core.events import SimLivelock, SimTimeout
+from repro.core.deadline import DeadlineArbiter
+from repro.core.events import SimExecutor, SimLivelock, SimTimeout
+from repro.core.policies import SchedFair
 from repro.core.stats import latency_summary
 from repro.core.task import Job, Task
+from repro.core.topology import node_topology
 
 N_REQUESTS = 28
 GATEWAY_COMPUTE = 0.010
@@ -237,14 +241,185 @@ SCENARIOS = ["bl-none", "bl-eq", "bl-opt", "lease-eq", "lease-opt",
 RATES = [0.1, 0.2, 0.33, 0.5]
 
 
+# --------------------------------------------------------------------- #
+# open-arrival SLO sweep: deadline-aware vs share-only arbitration
+# --------------------------------------------------------------------- #
+#: serving node for the closed-loop generator: a small shared node where a
+#: latency-bound serve job (half the lease) is co-located with a
+#: best-effort batch job that borrows every idle slot (I5) — the
+#: configuration where grant ORDER, not capacity, decides the tail
+SLO_SLOTS = 8
+SLO_SERVE_SHARE = 4.0
+SLO_BATCH_SHARE = 4.0
+SLO_SERVICE_S = 0.008       # per-request service demand
+SLO_CHUNK_S = 0.001         # scheduling granularity inside a request
+SLO_BATCH_CHUNK_S = 0.005   # batch compute between scheduling points
+#: two request classes: EDF has something to reorder only when tight-SLO
+#: requests queue behind loose-SLO ones
+SLO_CLASSES = [("tight", 0.030, 0.5), ("loose", 0.400, 0.5)]
+SLO_LOADS = [0.6, 0.8, 0.95, 1.1]
+
+
+def _slo_arrivals(rate: float, n: int, seed: int) -> list[float]:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    # plain floats: these flow into latencies and then into the JSON
+    return [float(a) for a in 0.05 + np.cumsum(gaps)]
+
+
+def run_slo_cell(load: float, *, deadline_aware: bool, n_requests: int = 800,
+                 seed: int = 0) -> dict:
+    """One (offered load, arbiter) cell of the open-arrival sweep.
+
+    Poisson arrivals at ``load × serve-lease capacity / service time``
+    into a serve job (dedicated preemptive group, every request carries an
+    absolute deadline) co-located with a slot-hungry batch job. The ONLY
+    independent variable is the arbiter class: ``DeadlineArbiter`` (EDF
+    grant order + negative-laxity urgent grants) vs the share-only
+    ``SlotArbiter`` baseline — capacity, policies, arrivals and service
+    times are bit-identical across the pair."""
+    default_pol = SchedFair(slice_s=0.003)
+    arb = DeadlineArbiter(default_pol) if deadline_aware else None
+    sim = SimExecutor(node_topology(SLO_SLOTS, 2), default_pol,
+                      max_time=10_000.0, arbiter=arb)
+    serve = Job("serve")
+    batch = Job("batch")
+    sim.attach(serve, policy=SchedFair(slice_s=0.003),
+               share=SLO_SERVE_SHARE)
+    sim.attach(batch, policy=SchedFair(slice_s=0.020),
+               share=SLO_BATCH_SHARE)
+
+    rate = load * SLO_SERVE_SHARE / SLO_SERVICE_S
+    arrivals = _slo_arrivals(rate, n_requests, seed)
+    rng = np.random.default_rng(seed + 1)
+    classes = rng.choice(len(SLO_CLASSES), size=n_requests,
+                         p=[w for _, _, w in SLO_CLASSES])
+    horizon = arrivals[-1] + 2.0
+    n_chunks = max(1, round(SLO_SERVICE_S / SLO_CHUNK_S))
+
+    def batch_body():
+        while sim.now() < horizon:
+            yield st.compute(SLO_BATCH_CHUNK_S)
+            yield st.checkpoint()
+
+    for i in range(SLO_SLOTS):
+        sim.spawn(batch, batch_body, name=f"batch{i}")
+
+    done: list[tuple[int, float, float]] = []  # (class, latency, miss)
+
+    def request(i: int, cls: int, arr: float, dl: float):
+        def gen():
+            for _ in range(n_chunks):
+                yield st.compute(SLO_CHUNK_S)
+            end = sim.now()
+            done.append((cls, end - arr, float(end > dl)))
+
+        return gen
+
+    for i, arr in enumerate(arrivals):
+        cls = int(classes[i])
+        dl = arr + SLO_CLASSES[cls][1]
+        # the deadline rides on the task itself: a DeadlineArbiter folds
+        # it into its EDF grant order at on_ready time, the base arbiter
+        # ignores it (the A/B's only difference)
+        t = sim.spawn(serve, request(i, cls, arr, dl), name=f"req{i}",
+                      at=arr, deadline=dl)
+        t.cost_hint = SLO_SERVICE_S
+
+    sim.run(until=horizon + 5.0)
+    lats = [lat for _, lat, _ in done]
+    row = {
+        "arbiter": "deadline" if deadline_aware else "share",
+        "load": load,
+        "rate_rps": round(rate, 2),
+        "requests": n_requests,
+        "completed": len(done),
+        "miss_rate": (sum(m for _, _, m in done) / len(done)
+                      if done else 1.0),
+        **summarize_latencies(lats, prefix="lat_"),
+    }
+    for ci, (cname, slo, _) in enumerate(SLO_CLASSES):
+        cl = [(lat, m) for c, lat, m in done if c == ci]
+        row[f"{cname}_slo_s"] = slo
+        row[f"{cname}_miss_rate"] = (sum(m for _, m in cl) / len(cl)
+                                     if cl else 1.0)
+        row.update(summarize_latencies([lat for lat, _ in cl],
+                                       prefix=f"{cname}_lat_"))
+    if deadline_aware:
+        row["urgent_grants"] = sim.sched.arbiter.urgent_grants
+    return row
+
+
+def run_slo_sweep(loads=None, *, n_requests: int = 800,
+                  seed: int = 0) -> dict:
+    """A/B the two arbiters across offered loads; returns rows plus a
+    headline counting the loads where deadline-aware wins BOTH p99 and
+    miss rate (the PR's acceptance bar: ≥ 2)."""
+    loads = loads if loads is not None else SLO_LOADS
+    rows = []
+    wins = []
+    print("arbiter,load,rate_rps,lat_p99,lat_p999,miss_rate,tight_miss")
+    for load in loads:
+        pair = {}
+        for aware in (False, True):
+            r = run_slo_cell(load, deadline_aware=aware,
+                             n_requests=n_requests, seed=seed)
+            rows.append(r)
+            pair[r["arbiter"]] = r
+            print(f"{r['arbiter']},{load},{r['rate_rps']},"
+                  f"{r['lat_p99']:.4f},{r['lat_p999']:.4f},"
+                  f"{r['miss_rate']:.4f},{r['tight_miss_rate']:.4f}",
+                  flush=True)
+        d, s = pair["deadline"], pair["share"]
+        wins.append({
+            "load": load,
+            "p99_ratio": (round(s["lat_p99"] / d["lat_p99"], 3)
+                          if d["lat_p99"] > 0 else None),
+            "deadline_wins_p99": bool(d["lat_p99"] < s["lat_p99"]),
+            "deadline_wins_miss": bool(d["miss_rate"] < s["miss_rate"]),
+        })
+    n_wins = sum(1 for w in wins
+                 if w["deadline_wins_p99"] and w["deadline_wins_miss"])
+    print(f"# deadline-aware wins p99 AND miss rate at {n_wins}/"
+          f"{len(loads)} offered-load points")
+    return {
+        "loads": list(loads),
+        "n_requests": n_requests,
+        "service_s": SLO_SERVICE_S,
+        "classes": [{"name": n, "slo_s": s, "weight": w}
+                    for n, s, w in SLO_CLASSES],
+        "rows": rows,
+        "per_load": wins,
+        "deadline_wins_both": n_wins,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--out", default="BENCH_microservices.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_microservices.json, "
+                         "or BENCH_microservices.smoke.json with --smoke)")
     ap.add_argument("--smoke", action="store_true",
                     help="single mid-load rate; checks the sweep runs")
     ap.add_argument("--rates", type=float, nargs="*", default=None)
+    ap.add_argument("--slo-only", action="store_true",
+                    help="run only the open-arrival SLO sweep (skip the "
+                         "Fig. 4 scenario grid)")
     args = ap.parse_args(argv)
+    out = args.out or ("BENCH_microservices.smoke.json" if args.smoke
+                       else "BENCH_microservices.json")
     rates = args.rates if args.rates else ([0.33] if args.smoke else RATES)
+
+    if args.slo_only:
+        slo = run_slo_sweep(loads=[0.8, 1.1] if args.smoke else None,
+                            n_requests=150 if args.smoke else 800)
+        payload = {"bench": "microservices", "smoke": args.smoke,
+                   "slo_only": True, "slo_sweep": slo}
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {out}")
+        return 0
 
     print("scenario,rate,throughput,lat_mean,lat_p95,completed")
     rows = []
@@ -291,6 +466,8 @@ def main(argv=None) -> int:
             print(f"# bl-{split}/lease-{split} mean-latency ratio at {mid}: "
                   f"{r:.2f}x (work-conserving leases vs static cores)"
                   f"{note}")
+    slo = run_slo_sweep(loads=[0.8, 1.1] if args.smoke else None,
+                        n_requests=150 if args.smoke else 800)
     payload = {
         "bench": "microservices",
         "smoke": args.smoke,
@@ -298,11 +475,12 @@ def main(argv=None) -> int:
         "n_requests": N_REQUESTS,
         "headline": headline,
         "rows": [{k: v for k, v in r.items() if k != "logs"} for r in rows],
+        "slo_sweep": slo,
     }
-    with open(args.out, "w") as f:
+    with open(out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
-    print(f"wrote {args.out}")
+    print(f"wrote {out}")
     return 0
 
 

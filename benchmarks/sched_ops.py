@@ -52,7 +52,14 @@ from repro.core.topology import Topology
 
 MIN_SAMPLE_S = 0.5  # keep timing chunks above this to dampen jitter
 
-GATED_KEYS = ("policy.fair.pick_cycle", "policy.coop.pick_cycle")
+GATED_KEYS = ("policy.fair.pick_cycle", "policy.coop.pick_cycle",
+              "sched.preempt_cycle")
+#: per-key max-drop overrides (fraction below baseline that still passes).
+#: sched.preempt_cycle's committed baseline is the POST-fast-path number
+#: (self-ticking checkpoints, ~2 orders of magnitude above the watchdog-
+#: driven cycle): a 0.6 floor still pins the 10x-over-the-old-path claim
+#: with a wide margin while absorbing shared-host scheduling noise.
+GATE_DROP_OVERRIDES = {"sched.preempt_cycle": 0.60}
 
 
 def _ops_per_sec(cycle, iters_hint: int, repeat: int = 1) -> tuple[float, int]:
@@ -247,11 +254,24 @@ def bench_tick_driver(*, n_timers: int, repeat: int = 1) -> dict:
     return {"ops_per_sec": best, "iterations": total, "n_timers": n_timers}
 
 
-def bench_preempt_cycle(*, duration: float = 1.0) -> dict:
-    """End-to-end real-thread preemption rate: two CPU-bound SCHED_FAIR
-    tasks share ONE slot under a fast tick; one op = a delivered
-    preemption (watchdog tick -> request_preempt -> checkpoint yield ->
-    redispatch of the sibling)."""
+def bench_preempt_cycle(*, duration: float = 1.0, repeat: int = 1) -> dict:
+    """End-to-end real-thread preemption rate, best of ``repeat`` runs:
+    two CPU-bound SCHED_FAIR tasks share ONE slot; one op = a delivered
+    preemption. Since the self-ticking checkpoint fast path this is
+    checkpoint-latency bound (slice-expiry poll -> yield -> redispatch of
+    the sibling) with the watchdog tick as backstop; repeat samples are
+    fresh runtimes, so the max is the least-noisy estimate on a shared
+    host."""
+    best = None
+    for _ in range(max(1, repeat)):
+        r = _bench_preempt_cycle_once(duration=duration)
+        if best is None or r["ops_per_sec"] > best["ops_per_sec"]:
+            best = r
+    best["repeat"] = max(1, repeat)
+    return best
+
+
+def _bench_preempt_cycle_once(*, duration: float) -> dict:
     import threading
 
     from repro.core.threads import UsfRuntime
@@ -274,9 +294,78 @@ def bench_preempt_cycle(*, duration: float = 1.0) -> dict:
         assert rt.join(t, timeout=10.0)
     preempts = sum(t.stats.preemptions for t in tasks)
     ticks = rt.watchdog.ticks_fired
+    polls = rt.sched.poll_preempts
     rt.shutdown(timeout=5.0)
     return {"ops_per_sec": preempts / duration, "iterations": preempts,
-            "ticks_fired": ticks, "duration_s": duration}
+            "ticks_fired": ticks, "poll_preempts": polls,
+            "duration_s": duration}
+
+
+def bench_urgent_preempt_latency(*, trials: int = 50) -> dict:
+    """Request-to-core-acquired latency of the urgent-grant path.
+
+    A best-effort SCHED_FAIR spinner BORROWS the only slot (its lease
+    quota is 0; the serve job owns the slot but sits idle). Each trial
+    submits one serve task whose deadline is already past: the
+    ``DeadlineArbiter`` fires ``urgent_preempt`` at on-ready time — CV
+    kick, checkpoint-consumed flag, successor-hinted redispatch — and the
+    trial measures submit() -> first instruction of the task body. This
+    is the latency the SLO story rides on (tracked, not gated: it is a
+    latency, and the preempt-cycle gate already pins the same path's
+    throughput)."""
+    import threading
+
+    from repro.core.deadline import DeadlineArbiter
+    from repro.core.threads import UsfRuntime
+
+    default_pol = SchedCoop(quantum=0.02)
+    rt = UsfRuntime(Topology(1, 1), default_pol,
+                    arbiter=DeadlineArbiter(default_pol))
+    serve = Job("bench-serve")
+    batch = Job("bench-batch")
+    # 3:1 shares over ONE slot -> serve quota 1, batch quota 0: the
+    # spinner only ever runs on borrowed capacity (the urgent victim)
+    rt.attach(serve, policy=SchedFair(slice_s=0.003), share=3.0)
+    rt.attach(batch, policy=SchedFair(slice_s=0.050), share=1.0)
+    stop = threading.Event()
+
+    def spin():
+        n = 0
+        while not stop.is_set():
+            n += 1
+            if n % 64 == 0:
+                rt.checkpoint()
+
+    spinner = rt.create(spin, job=batch)
+    time.sleep(0.05)  # let the spinner borrow the slot
+
+    lats = []
+    try:
+        for _ in range(max(1, trials)):
+            got = []
+
+            def body():
+                got.append(time.monotonic())
+
+            t0 = time.monotonic()
+            t = rt.create(body, job=serve, deadline=t0 - 1e-3)
+            assert rt.join(t, timeout=10.0), "urgent task never ran"
+            lats.append(got[0] - t0)
+            time.sleep(0.002)  # let the spinner re-borrow the slot
+    finally:
+        stop.set()
+        rt.join(spinner, timeout=10.0)
+        urgents = rt.sched.arbiter.urgent_grants
+        kicks = rt.watchdog.kicks
+        rt.shutdown(timeout=5.0)
+    xs = sorted(lats)
+
+    def pct(p: float) -> float:
+        return xs[min(len(xs) - 1, int(round(p * (len(xs) - 1))))]
+
+    return {"trials": len(xs), "mean_s": sum(xs) / len(xs),
+            "p50_s": pct(0.50), "p99_s": pct(0.99), "max_s": xs[-1],
+            "urgent_grants": urgents, "watchdog_kicks": kicks}
 
 
 # --------------------------------------------------------------------------- #
@@ -362,13 +451,14 @@ def check_gate(results: dict, baseline_path: str, max_drop: float) -> list[str]:
         cur = results.get(key)
         if base is None or cur is None:
             continue
-        floor = (1.0 - max_drop) * base["ops_per_sec"]
+        drop = GATE_DROP_OVERRIDES.get(key, max_drop)
+        floor = (1.0 - drop) * base["ops_per_sec"]
         verdict = "ok" if cur["ops_per_sec"] >= floor else "FAIL"
         print(f"gate {key}: {cur['ops_per_sec']:,.0f} ops/s vs baseline "
               f"{base['ops_per_sec']:,.0f} (floor {floor:,.0f}) {verdict}")
         if cur["ops_per_sec"] < floor:
             failures.append(
-                f"{key} dropped >{max_drop:.0%}: {cur['ops_per_sec']:,.0f} "
+                f"{key} dropped >{drop:.0%}: {cur['ops_per_sec']:,.0f} "
                 f"< {floor:,.0f} ops/s (baseline {base['ops_per_sec']:,.0f})"
             )
     return failures
@@ -410,7 +500,7 @@ def main(argv=None) -> int:
             # best-of-3 sampling even in smoke mode: the gate compares
             # best-of-N against best-of-N on a noisy shared host
             base = gate_baseline.get(key)
-            if base is not None:
+            if base is not None and "n_ready" in base:
                 pol_ready, pol_iters, pol_repeat = base["n_ready"], 500, 3
         r = bench_policy(pol, n_ready=pol_ready, n_slots=args.slots,
                          iters_hint=pol_iters, repeat=pol_repeat)
@@ -434,10 +524,19 @@ def main(argv=None) -> int:
     results["sched.tick_driver"] = r
     print(f"sched.tick_driver: {r['ops_per_sec']:,.0f} timer-fires/s "
           f"({r['n_timers']} timers, one watchdog thread)")
-    r = bench_preempt_cycle(duration=0.3 if args.smoke else 1.0)
+    # gated even in smoke mode: best-of-3 against a best-of-3 baseline
+    r = bench_preempt_cycle(
+        duration=0.3 if args.smoke else 1.0,
+        repeat=3 if (args.gate or not args.smoke) else 1)
     results["sched.preempt_cycle"] = r
     print(f"sched.preempt_cycle: {r['ops_per_sec']:,.0f} preemptions/s "
-          f"(real threads, 1 slot, tick {0.002}s)")
+          f"(real threads, 1 slot, slice {0.002}s, best of "
+          f"{r['repeat']})")
+    r = bench_urgent_preempt_latency(trials=10 if args.smoke else 50)
+    results["sched.urgent_preempt_latency"] = r
+    print(f"sched.urgent_preempt_latency: p50 {r['p50_s'] * 1e6:,.0f}us "
+          f"p99 {r['p99_s'] * 1e6:,.0f}us max {r['max_s'] * 1e6:,.0f}us "
+          f"({r['trials']} trials, {r['urgent_grants']} urgent grants)")
     for kind in ("yield_churn", "fair_ticks"):
         r = bench_sim_events(kind, scale=scale,
                              repeat=1 if args.smoke else 2)

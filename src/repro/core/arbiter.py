@@ -146,6 +146,22 @@ class SlotArbiter:
     ``Policy`` (pick / on_ready / on_run / on_stop / should_preempt /
     has_ready / ready_count); job lifecycle goes through ``attach_job`` /
     ``detach_job`` / ``on_job``.
+
+    **Extending the grant order**: subclasses customize job-level
+    arbitration by overriding ``_pick_multi`` (which job's policy gets a
+    freed slot) and ``_recompute_quotas`` (how shares materialize into
+    integer quotas). The worked example is
+    ``repro.core.deadline.DeadlineArbiter``: it reorders ``_pick_multi``
+    candidates *within* each I5 tier by earliest deadline (spare-lease
+    groups still strictly precede borrowers, so non-deadline siblings keep
+    their I5 guarantee), boosts the effective share of deadline-pressed
+    jobs in ``_recompute_quotas``, and adds an urgent-grant path that
+    flags need-resched on the lowest-value borrowed slot the moment a
+    deadline job's laxity goes negative. Overrides only see the
+    multi-group path: with a single policy group the entry points stay
+    rebound to the default policy's own methods (the zero-overhead fast
+    path below), so deadline machinery costs nothing until a second group
+    — or a deadline — actually shows up.
     """
 
     def __init__(self, default_policy: Policy):
@@ -206,6 +222,32 @@ class SlotArbiter:
     def lease_of(self, job: Job) -> Optional[SlotLease]:
         lease = job.lease
         return lease if lease is not None and lease.arbiter is self else None
+
+    def laxity_headroom(self, now: float) -> Optional[float]:
+        """Minimum deadline laxity across attached jobs, or ``None`` when
+        nothing deadline-bound is pending. The base arbiter tracks no
+        deadlines — the adaptive slice controller and the watchdog read
+        this through one virtual call that stays a constant ``None`` here
+        (``DeadlineArbiter`` overrides it)."""
+        return None
+
+    def claim(self, task: Task) -> bool:
+        """Withdraw a specific READY ``task`` from its policy queue for an
+        urgent-grant redispatch (``Scheduler._fill`` consumes the slot's
+        successor hint through this, skipping the full pick while keeping
+        the policy's incremental accounting exact). Returns False when the
+        task cannot be claimed — not attached here, not queued, or its
+        policy lacks ``remove`` — in which case the caller falls back to a
+        normal pick."""
+        if task.state is not TaskState.READY:
+            return False
+        lease = self.lease_of(task.job)
+        policy = lease.group.policy if lease is not None else self._default
+        try:
+            policy.remove(task)
+        except (KeyError, NotImplementedError):
+            return False
+        return True
 
     def lease_snapshot(self) -> dict:
         return {

@@ -33,6 +33,8 @@ from __future__ import annotations
 import heapq
 from typing import Any, Callable, Optional
 
+from repro.core.adaptive import SliceController
+from repro.core.arbiter import SlotArbiter
 from repro.core.policies.base import Policy
 from repro.core.scheduler import Scheduler
 from repro.core.simtask import (
@@ -87,6 +89,7 @@ class SimExecutor:
         costs: Optional[SimCosts] = None,
         max_time: float = 3600.0,
         max_events: int = 50_000_000,
+        arbiter: Optional[SlotArbiter] = None,
     ):
         self.topology = topology
         self.costs = costs or SimCosts()
@@ -110,12 +113,25 @@ class SimExecutor:
             clock=lambda: self._now,
             dispatch=self._on_dispatch,
             ctx_switch_cost=self.costs.ctx_switch,
+            arbiter=arbiter,
         )
+        #: adaptive tick periods — the SAME deterministic controller the
+        #: real-thread watchdog uses (repro.core.adaptive), fed from the
+        #: same (queue depth, laxity headroom) observations at tick time,
+        #: so adaptive-slice policy behaviour is lockstep-testable in
+        #: virtual time. Without deadline pressure the controller is
+        #: stateless and every tick deadline equals the base period:
+        #: non-deadline simulations stay bit-identical.
+        self.slices = SliceController()
         #: slot -> deadline of its authoritative pending preemption tick;
         #: an earlier re-arm (e.g. a live swap to a shorter-slice policy)
         #: supersedes a pending later tick, whose token dies at fire time
         #: — mirrors the real-thread watchdog's class-migration semantics
         self._tick_armed: dict[int, float] = {}
+        #: urgent grants (negative-laxity deadline preemptions) are
+        #: serviced at an immediate tick event — the virtual-time twin of
+        #: the real-thread watchdog's condition-variable kick
+        self.sched.on_urgent = self._urgent_kick
         #: cache residency: which task's working set last warmed each slot
         self._slot_last: dict[int, int] = {}
 
@@ -126,9 +142,13 @@ class SimExecutor:
         return self._now
 
     def spawn(self, job: Job, genfn: Callable[[], Any], *, name: str = "",
-              at: float = 0.0, warmup_scale: float = 1.0) -> Task:
-        """Create a task whose body is ``genfn()`` and submit it at time ``at``."""
-        task = Task(job, body=genfn, name=name)
+              at: float = 0.0, warmup_scale: float = 1.0,
+              deadline: Optional[float] = None) -> Task:
+        """Create a task whose body is ``genfn()`` and submit it at time
+        ``at``. ``deadline`` (absolute virtual time) rides on the task: a
+        deadline-aware arbiter folds it into its grant order the moment
+        the task turns READY."""
+        task = Task(job, body=genfn, name=name, deadline=deadline)
         task._warmup_scale = warmup_scale  # type: ignore[attr-defined]
         if at <= self._now:
             self._submit(task)
@@ -565,12 +585,20 @@ class SimExecutor:
         pol = self.sched.policy_of(task.job)
         if not pol.preemptive or pol.tick_interval is None:
             return
-        deadline = self._now + pol.tick_interval
+        deadline = self._now + self.slices.effective(pol.tick_interval)
         cur = self._tick_armed.get(slot_id)
         if cur is not None and cur <= deadline:
             return
         self._tick_armed[slot_id] = deadline
         self._post_ev(deadline, _EV_TICK, slot_id)
+
+    def _urgent_kick(self, slot_id: int) -> None:
+        """Service an urgent preemption request (``Scheduler.urgent_preempt``)
+        at an immediate tick instead of the slot's next periodic deadline:
+        the pending later tick becomes a dead token exactly as in a
+        shorter-slice re-arm."""
+        self._tick_armed[slot_id] = self._now
+        self._post_ev(self._now, _EV_TICK, slot_id)
 
     def _tick(self, slot_id: int) -> None:
         if self._tick_armed.get(slot_id) != self._now:
@@ -579,6 +607,14 @@ class SimExecutor:
         running = self.sched.running_on(slot_id)
         if running is None:
             return  # re-armed on next dispatch
+        pol = self.sched.policy_of(running.job)
+        if pol.preemptive and pol.tick_interval is not None:
+            # mirror the watchdog's adaptation observation (same controller,
+            # same signals) before the re-arm below reads the new period
+            arb = self.sched.arbiter
+            self.slices.observe(pol.tick_interval,
+                                depth=arb.ready_count(),
+                                laxity=arb.laxity_headroom(self._now))
         if self.sched.tick(slot_id):
             task = running
             if _owned(task):

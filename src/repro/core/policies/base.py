@@ -69,6 +69,16 @@ class Policy:
     def should_preempt(self, task: "Task", slot_id: int, now: float) -> bool:
         return False
 
+    def slice_for(self, task: "Task") -> Optional[float]:
+        """The running time after which ``should_preempt`` would evict
+        ``task`` — i.e. the task's *effective* slice, which may be shorter
+        than ``tick_interval`` (SCHED_FAIR divides the slice by weight).
+        ``None`` means the task never slice-expires (non-preemptive
+        policies). The real-thread runtime stamps this on the slot at
+        dispatch so checkpoints can self-detect expiry without waiting for
+        a watchdog tick (the fast preempt cycle)."""
+        return self.tick_interval if self.preemptive else None
+
     # -- migration support (live job re-homing, arbiter attach) ---------- #
     def remove(self, task: "Task") -> None:
         """Detach a READY task from the pool without dispatching it.

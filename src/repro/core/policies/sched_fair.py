@@ -321,6 +321,11 @@ class SchedFair(Policy):
         ran = now - self._run_started.get(task.tid, now)
         return ran >= self.slice_s / self._w(task)
 
+    def slice_for(self, task: Task) -> float:
+        # the effective slice should_preempt compares against: weight-
+        # scaled, so a nice-0 task's self-expiry matches its eviction time
+        return self.slice_s / self._w(task)
+
     def ready_count(self) -> int:
         return self._nready
 

@@ -46,7 +46,8 @@ class SchedulerError(RuntimeError):
 
 
 class _SlotState:
-    __slots__ = ("running", "run_started", "idle_since", "need_resched")
+    __slots__ = ("running", "run_started", "idle_since", "need_resched",
+                 "slice_expiry", "successor")
 
     def __init__(self) -> None:
         self.running: Optional[Task] = None
@@ -56,6 +57,18 @@ class _SlotState:
         #: running task's next scheduling point or explicit checkpoint
         #: consumes it and converts into a preempt/yield
         self.need_resched: bool = False
+        #: absolute clock time at which the running task's slice expires
+        #: (0.0 = no self-expiry). The real-thread checkpoint fast path
+        #: compares against this WITHOUT taking the scheduler lock, so a
+        #: slice expiry is noticed at the very next checkpoint instead of
+        #: waiting out a watchdog tick period — the core of the fast
+        #: preempt cycle. A stale read is benign: ``poll_preempt``
+        #: re-validates the verdict under the lock.
+        self.slice_expiry: float = 0.0
+        #: preferred successor for the next fill of this slot (urgent-grant
+        #: redispatch hint, set by a deadline-aware arbiter): consumed —
+        #: and validated — by ``_fill`` before falling back to a full pick.
+        self.successor: Optional[Task] = None
 
 
 class Scheduler:
@@ -73,6 +86,9 @@ class Scheduler:
     dispatch:  executor callback ``(task, slot_id) -> None`` that actually
                resumes the task on the slot.
     ctx_switch_cost: accounted (and, in the sim, *charged*) per swap.
+    arbiter:   optional job-level arbiter instance (default: a fresh
+               ``SlotArbiter``). Pass a ``DeadlineArbiter`` for EDF /
+               least-laxity grant ordering (repro.core.deadline).
     """
 
     def __init__(
@@ -83,6 +99,7 @@ class Scheduler:
         clock: Callable[[], float],
         dispatch: Callable[[Task, int], None],
         ctx_switch_cost: float = 0.0,
+        arbiter: Optional[SlotArbiter] = None,
     ):
         self.topology = topology
         #: the default intra-job policy (kept by name for back-compat; the
@@ -109,8 +126,16 @@ class Scheduler:
         self._lock = threading.RLock()
         self._ctx_switch_time = 0.0
         self._started_at = self.clock()
+        #: preemptions initiated by the checkpoint self-tick fast path
+        #: (``poll_preempt``) rather than a watchdog request
+        self.poll_preempts = 0
+        #: executor hook fired (under the scheduler lock) when an urgent
+        #: preemption request lands on a slot — the real-thread runtime
+        #: binds this to the watchdog's condition-variable kick so the
+        #: request is serviced immediately instead of at the next tick.
+        self.on_urgent: Optional[Callable[[int], None]] = None
         #: job-level slot arbiter: every scheduling point routes through it
-        self.arbiter = SlotArbiter(policy)
+        self.arbiter = arbiter if arbiter is not None else SlotArbiter(policy)
         self.arbiter.attach(self)
 
     # ------------------------------------------------------------------ #
@@ -325,12 +350,16 @@ class Scheduler:
         """Periodic tick (preemptive policies): should the slot's task be
         preempted now? The *executor* then calls ``preempt``. Routed to the
         running task's own policy; the arbiter also turns this into the
-        lease-revocation scheduling point for over-lease preemptive jobs."""
+        lease-revocation scheduling point for over-lease preemptive jobs.
+        A pending asynchronous preemption request (``request_preempt`` /
+        ``urgent_preempt``) is honoured here too — a tick is a scheduling
+        point, and ticks only ever fire on preemptive-policy slots."""
         with self._lock:
             st = self._slots[slot_id]
             if st.running is None:
                 return False
-            return self.arbiter.should_preempt(st.running, slot_id, self.clock())
+            return st.need_resched or \
+                self.arbiter.should_preempt(st.running, slot_id, self.clock())
 
     # ------------------------------------------------------------------ #
     # deferred preemption (real-thread tick driver)
@@ -344,25 +373,34 @@ class Scheduler:
         verdict logic, not a duplicate — this delegates)."""
         return self.tick_and_rearm(slot_id)[0]
 
-    def tick_and_rearm(self, slot_id: int) -> tuple[bool, Optional[float]]:
+    def tick_and_rearm(self, slot_id: int
+                       ) -> tuple[bool, Optional[float], int, Optional[float]]:
         """``tick_request`` plus the watchdog's re-arm decision under ONE
-        lock acquisition: returns (flagged, tick_interval) where
-        ``tick_interval`` is the running task's policy period when that
-        policy is preemptive, else None. The coalesced fire loop calls
-        this once per member slot instead of three lock round-trips
-        (verdict, running_on, policy_of) — and the re-arm verdict is
-        guaranteed to be about the same task the tick verdict was."""
+        lock acquisition: returns (flagged, tick_interval, ready_depth,
+        laxity) where ``tick_interval`` is the running task's policy
+        period when that policy is preemptive (else None),
+        ``ready_depth`` is the arbiter-wide ready-queue depth and
+        ``laxity`` the arbiter's deadline headroom (None without a
+        deadline-aware arbiter) — the two signals the adaptive slice
+        controller shrinks/grows tick classes from. The coalesced fire
+        loop calls this once per member slot instead of several lock
+        round-trips, and the re-arm verdict is guaranteed to be about the
+        same task the tick verdict was."""
         with self._lock:
             st = self._slots[slot_id]
             task = st.running
             if task is None:
-                return False, None
+                return False, None, 0, None
+            now = self.clock()
             flagged = False
-            if self.arbiter.should_preempt(task, slot_id, self.clock()):
+            if self.arbiter.should_preempt(task, slot_id, now):
                 st.need_resched = True
                 flagged = True
             pol = self.arbiter.policy_of(task.job)
-            return flagged, (pol.tick_interval if pol.preemptive else None)
+            return (flagged,
+                    (pol.tick_interval if pol.preemptive else None),
+                    self.arbiter.ready_count(),
+                    self.arbiter.laxity_headroom(now))
 
     def request_preempt(self, slot_id: int) -> bool:
         """Mark the slot need-resched (asynchronous preemption request).
@@ -404,6 +442,58 @@ class Scheduler:
                 self.yield_(task)
             return True
 
+    def poll_preempt(self, task: Task) -> bool:
+        """Checkpoint-driven slice-expiry poll — the self-ticking half of
+        the fast preempt cycle.
+
+        The real-thread runtime stamps ``_SlotState.slice_expiry`` at
+        dispatch (run_started + the policy's per-task slice); a checkpoint
+        that observes the expiry lock-free lands here, where the verdict is
+        re-validated under the lock: exactly what a watchdog tick arriving
+        at this instant would decide, but at checkpoint latency instead of
+        tick latency. Returns True if the task was descheduled (the
+        executor must park it). On a False verdict the expiry is pushed one
+        slice forward so an uncontended loop does not take the lock at
+        every checkpoint."""
+        with self._lock:
+            slot = task.slot
+            if slot is None:
+                return False
+            st = self._slots[slot]
+            if st.running is not task:
+                return False
+            if st.need_resched or \
+                    self.arbiter.should_preempt(task, slot, self.clock()):
+                self.poll_preempts += 1
+                if self.arbiter.policy_of(task.job).preemptive:
+                    self.preempt(task)
+                else:
+                    self.yield_(task)
+                return True
+            sl = self.arbiter.policy_of(task.job).slice_for(task)
+            st.slice_expiry = (self.clock() + sl) if sl else 0.0
+            return False
+
+    def urgent_preempt(self, slot_id: int,
+                       successor: Optional[Task] = None) -> bool:
+        """``request_preempt`` plus the urgent extras under ONE lock: stash
+        the preferred ``successor`` on the slot (consumed by the next
+        ``_fill`` — redispatch skips the full pick) and fire the executor's
+        ``on_urgent`` hook (the real-thread runtime kicks the watchdog's
+        condition variable so the flag is serviced immediately instead of
+        at the next heap deadline). Used by the deadline arbiter when a
+        job's laxity goes negative. Returns False if the slot was idle."""
+        with self._lock:
+            st = self._slots[slot_id]
+            if st.running is None:
+                return False
+            st.need_resched = True
+            if successor is not None:
+                st.successor = successor
+            if self.on_urgent is not None:
+                self.on_urgent(slot_id)
+            return True
+
     # ------------------------------------------------------------------ #
     # internals
     # ------------------------------------------------------------------ #
@@ -426,8 +516,10 @@ class Scheduler:
         self.arbiter.on_stop(task, slot, now, elapsed, reason)
         st.running = None
         st.need_resched = False  # any scheduling point satisfies the request
+        st.slice_expiry = 0.0
         st.idle_since = now
         self._idle.add(slot)
+        task._slot_state = None
         task.slot = None
         task.last_slot = slot  # preferred affinity for next time (§4.1)
         return slot, now
@@ -446,6 +538,16 @@ class Scheduler:
             self._idle.discard(slot_id)
             self._parked.add(slot_id)
             return None
+        hint = st.successor
+        if hint is not None:
+            # urgent-grant redispatch: the arbiter already chose the
+            # successor when it flagged this slot — claim it from its
+            # policy queue and skip the full pick. The hint is validated
+            # (still READY, still claimable); anything stale falls through
+            # to the normal pick.
+            st.successor = None
+            if hint.state is TaskState.READY and self.arbiter.claim(hint):
+                return self._run_on(hint, slot_id, now)
         task = self.arbiter.pick(slot_id)
         if task is None:
             return None
@@ -476,6 +578,7 @@ class Scheduler:
         task.stats.dispatches += 1
         st.running = task
         st.run_started = now
+        task._slot_state = st  # checkpoint fast path: one attribute hop
         self._idle.discard(slot_id)
         self._ctx_switch_time += self.ctx_switch_cost
         self.arbiter.on_run(task, slot_id, now)

@@ -69,9 +69,11 @@ def collect(tasks: Iterable["Task"], *, makespan: float, n_slots: int) -> SchedS
 
 
 def latency_summary(latencies: list[float]) -> dict:
-    """Mean / p50 / p95 / p99 / max — what Fig. 4 reports per request."""
+    """Mean / p50 / p95 / p99 / p999 / max — what Fig. 4 reports per
+    request (p999 is what an SLO sweep's tail story hinges on)."""
     if not latencies:
-        return {"n": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0, "max": 0.0}
+        return {"n": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0,
+                "p999": 0.0, "max": 0.0}
     xs = sorted(latencies)
 
     def pct(p: float) -> float:
@@ -84,5 +86,6 @@ def latency_summary(latencies: list[float]) -> dict:
         "p50": pct(0.50),
         "p95": pct(0.95),
         "p99": pct(0.99),
+        "p999": pct(0.999),
         "max": xs[-1],
     }

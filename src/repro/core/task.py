@@ -97,14 +97,14 @@ class Task:
     """
 
     __slots__ = (
-        "tid", "job", "body", "name", "cost_hint", "state", "slot",
+        "tid", "job", "body", "name", "cost_hint", "deadline", "state", "slot",
         "last_slot", "user_affinity", "stats", "on_done", "_pending_wakeups",
         "_ctx",
         # sim-executor fields (events.py)
         "_gen", "_send", "_epoch", "_pending", "_pending_started",
         "_warmup_scale", "_owned_mutexes",
         # scheduler bookkeeping (scheduler.py / policies)
-        "_blocked_at", "_ready_at", "_yielded",
+        "_blocked_at", "_ready_at", "_yielded", "_slot_state",
         # thread-runtime fields (threads.py)
         "_resume_sem", "_done_event", "_storage", "_exc",
     )
@@ -116,12 +116,17 @@ class Task:
         *,
         name: str = "",
         cost_hint: float = 0.0,
+        deadline: Optional[float] = None,
     ):
         self.tid: int = next(_TID)
         self.job = job
         self.body = body
         self.name = name or f"task{self.tid}"
         self.cost_hint = cost_hint
+        #: optional absolute completion deadline (scheduler clock domain).
+        #: ``None`` (the default) means no SLO: the deadline-aware arbiter
+        #: ignores the task and plain arbiters never read the field.
+        self.deadline = deadline
         self.state = TaskState.CREATED
         self.slot: Optional[int] = None          # slot currently running on
         self.last_slot: Optional[int] = None     # preferred affinity (§4.1)
@@ -136,6 +141,10 @@ class Task:
         self._yielded = False
         self._owned_mutexes: Any = None
         self._warmup_scale: float = 1.0
+        #: while RUNNING: the _SlotState of the task's slot, cached so the
+        #: real-thread checkpoint fast path is one attribute hop instead of
+        #: a slot-table index (scheduler.py sets/clears it at dispatch/stop)
+        self._slot_state: Any = None
         job.tasks.append(self)
 
     # -- affinity hints (paper §4.3.2: setaffinity is a hint; getaffinity

@@ -38,6 +38,8 @@ import time
 from collections import deque
 from typing import Any, Callable, Optional
 
+from repro.core.adaptive import SliceController
+from repro.core.arbiter import SlotArbiter
 from repro.core.policies.base import Policy
 from repro.core.scheduler import Scheduler
 from repro.core.task import Job, Task, TaskState
@@ -61,6 +63,8 @@ class UsfTaskError(UsfError):
 _WD_CALL = 0  # payload = _TimerHandle (timed wakeup / timeout callback)
 _WD_TICK = 1  # payload = tick interval (one coalesced entry per interval
 #               class; the member slots are looked up at pop time)
+_WD_KICK = 2  # payload = slot_id (urgent flag service: fires immediately
+#               instead of waiting out the slot's class deadline)
 
 
 class _TimerHandle:
@@ -128,9 +132,15 @@ class _Watchdog:
         self._thread: Optional[threading.Thread] = None
         self._stop = False
         self._cancelled = 0  # dead call entries since the last compaction
+        #: adaptive tick-period controller: the class *key* stays the base
+        #: interval (the heap stays O(interval classes)); only the re-arm
+        #: deadline uses the effective period (repro.core.adaptive)
+        self.slices = SliceController()
         #: ticks fired / preemptions requested (introspection + benchmarks)
         self.ticks_fired = 0
         self.preempts_requested = 0
+        #: urgent condition-variable kicks serviced
+        self.kicks = 0
 
     # -- arming (any thread) ------------------------------------------- #
     def call_at(self, deadline: float, fn: Callable[[], None]) -> _TimerHandle:
@@ -182,10 +192,12 @@ class _Watchdog:
             cur = self._slot_interval.get(slot_id)
             if cur == interval:
                 return  # already riding this class's periodic entry
+            effective = self.slices.effective
             if cur is not None:
                 now = time.monotonic()
-                cur_dl = self._class_deadline.get(cur, now + cur)
-                new_dl = self._class_deadline.get(interval, now + interval)
+                cur_dl = self._class_deadline.get(cur, now + effective(cur))
+                new_dl = self._class_deadline.get(interval,
+                                                  now + effective(interval))
                 if cur_dl <= new_dl:
                     return  # pending service is already no later: keep it
                 self._classes[cur].discard(slot_id)
@@ -195,9 +207,25 @@ class _Watchdog:
                 members = self._classes[interval] = set()
             members.add(slot_id)
             if interval not in self._class_deadline:
-                deadline = time.monotonic() + interval
+                # the adaptive controller sets the class's *effective*
+                # period; the class identity (heap key) stays the base
+                # interval, so coalescing is untouched
+                deadline = time.monotonic() + effective(interval)
                 self._class_deadline[interval] = deadline
                 self._push(deadline, _WD_TICK, interval)
+
+    def kick(self, slot_id: int) -> None:
+        """Urgent flag service: wake the driver NOW for one slot instead
+        of letting the flag wait out the slot's class deadline (the
+        condition-variable kick of the fast preempt cycle). The scheduler's
+        ``on_urgent`` hook lands here — under the scheduler lock, which is
+        safe: the established lock order is scheduler -> watchdog CV and
+        the driver never takes the scheduler lock while holding the CV."""
+        with self._cv:
+            if self._stop:
+                return
+            self.kicks += 1
+            self._push(0.0, _WD_KICK, slot_id)
 
     def tick_heap_stats(self) -> dict:
         """Introspection (tests/benchmarks): the coalescing contract is
@@ -277,13 +305,36 @@ class _Watchdog:
             if fn is not None:
                 fn()
             return
-        interval_cls, slots = entry[3]
         sched = self._rt.sched
+        if kind == _WD_KICK:
+            # urgent single-slot service: same verdict/flag/re-arm path as
+            # a periodic tick, just now instead of at the class deadline
+            slot_id = entry[3]
+            self.ticks_fired += 1
+            try:
+                flagged, interval, depth, laxity = \
+                    sched.tick_and_rearm(slot_id)
+            except Exception:
+                import sys
+                import traceback
+
+                print(f"usf-watchdog: kick for slot {slot_id} raised:\n"
+                      + traceback.format_exc(), file=sys.stderr)
+                return
+            if flagged:
+                self.preempts_requested += 1
+            if interval:
+                self.slices.observe(interval, depth=depth, laxity=laxity)
+                self.arm_tick(slot_id, interval)
+            return
+        interval_cls, slots = entry[3]
+        observed = False
         for slot_id in slots:
             self.ticks_fired += 1
             try:
                 # verdict + flag + re-arm decision under ONE scheduler lock
-                flagged, interval = sched.tick_and_rearm(slot_id)
+                flagged, interval, depth, laxity = \
+                    sched.tick_and_rearm(slot_id)
             except Exception:
                 # a raising custom should_preempt must only cost ITS slot
                 # one tick, not disarm every sibling slot of the class —
@@ -297,6 +348,12 @@ class _Watchdog:
                       + traceback.format_exc(), file=sys.stderr)
                 self.arm_tick(slot_id, interval_cls)
                 continue
+            if not observed:
+                # one adaptation observation per class fire (before the
+                # member re-arms, so the new effective period applies to
+                # the class entry they push)
+                self.slices.observe(interval_cls, depth=depth, laxity=laxity)
+                observed = True
             if flagged:
                 self.preempts_requested += 1
             # re-join a class while the slot still runs a preemptive-policy
@@ -360,6 +417,7 @@ class UsfRuntime:
         *,
         gating: bool = True,
         thread_cache: bool = True,
+        arbiter: Optional[SlotArbiter] = None,
     ):
         self.topology = topology
         self.gating = gating
@@ -383,7 +441,11 @@ class UsfRuntime:
             policy,
             clock=time.monotonic,
             dispatch=self._on_dispatch,
+            arbiter=arbiter,
         )
+        #: urgent flags (deadline arbiter) kick the watchdog CV instead of
+        #: waiting out the pending class deadline
+        self.sched.on_urgent = self.watchdog.kick
 
     # ------------------------------------------------------------------ #
     # pthread-like API
@@ -396,11 +458,18 @@ class UsfRuntime:
         *,
         job: Job,
         name: str = "",
+        deadline: Optional[float] = None,
     ) -> Task:
-        """pthread_create: recruit a (new or cached) worker for a new task."""
+        """pthread_create: recruit a (new or cached) worker for a new task.
+
+        ``deadline`` (absolute, scheduler clock domain) rides on the task:
+        a deadline-aware arbiter folds it into its grant order the moment
+        the task turns READY — including an urgent grant when the deadline
+        is already past."""
         if self._shutdown:
             raise UsfError("runtime is shut down")
-        task = Task(job, body=(fn, args, kwargs or {}), name=name)
+        task = Task(job, body=(fn, args, kwargs or {}), name=name,
+                    deadline=deadline)
         task._resume_sem = threading.Semaphore(0)  # type: ignore[attr-defined]
         task._done_event = threading.Event()  # type: ignore[attr-defined]
         task._storage = {}  # type: ignore[attr-defined]  # fresh task-locals
@@ -557,11 +626,30 @@ class UsfRuntime:
 
     def checkpoint(self) -> None:
         """Explicit preemption point (LibPreemptible-style): a compute loop
-        that never blocks calls this periodically; it is a cheap flag check
-        unless the watchdog marked the slot need-resched, in which case the
-        task yields the slot here and parks until redispatched."""
+        that never blocks calls this periodically.
+
+        Fast path: two lock-free attribute reads against the slot state
+        the scheduler cached on the task at dispatch — the need-resched
+        flag, then the precomputed absolute slice expiry. A checkpoint
+        that crosses the expiry *self-ticks* through
+        ``Scheduler.poll_preempt`` (verdict re-validated under the lock):
+        the preempt cycle completes at checkpoint latency instead of
+        waiting out a watchdog tick, which is what takes the end-to-end
+        ``sched.preempt_cycle`` number from tick-period-bound (~100/s) to
+        checkpoint-bound. The watchdog remains the backstop for tasks
+        that checkpoint rarely (and the only driver for lease-revocation
+        flags on slots whose task never self-expires)."""
         task = self._require_task()
-        if self.sched.preempt_requested(task) and self.sched.consume_preempt(task):
+        st = task._slot_state
+        if st is None:
+            return  # not scheduler-dispatched (free-running baseline mode)
+        if st.need_resched:
+            if self.sched.consume_preempt(task):
+                self._park(task)
+            return
+        expiry = st.slice_expiry
+        if expiry and time.monotonic() >= expiry \
+                and self.sched.poll_preempt(task):
             self._park(task)
 
     def task_local(self) -> dict:
@@ -591,6 +679,8 @@ class UsfRuntime:
         s["workers"] = len(self._all_workers)
         s["watchdog_ticks"] = self.watchdog.ticks_fired
         s["watchdog_preempt_requests"] = self.watchdog.preempts_requested
+        s["watchdog_kicks"] = self.watchdog.kicks
+        s["poll_preempts"] = self.sched.poll_preempts
         return s
 
     # ------------------------------------------------------------------ #
@@ -618,11 +708,18 @@ class UsfRuntime:
         task._resume_sem.acquire()  # type: ignore[attr-defined]
 
     def _on_dispatch(self, task: Task, slot_id: int) -> None:
-        task._resume_sem.release()  # type: ignore[attr-defined]
         if self._ticks_enabled:
             pol = self.sched.policy_of(task.job)
             if pol.preemptive and pol.tick_interval:
+                # stamp the absolute slice expiry BEFORE waking the worker:
+                # checkpoints self-detect expiry lock-free against this
+                # (the fast preempt cycle); the watchdog tick stays armed
+                # as the backstop for checkpoint-free stretches
+                sl = pol.slice_for(task)
+                st = self.sched._slots[slot_id]
+                st.slice_expiry = (st.run_started + sl) if sl else 0.0
                 self.watchdog.arm_tick(slot_id, pol.tick_interval)
+        task._resume_sem.release()  # type: ignore[attr-defined]
 
     def _worker_main(self, worker: _Worker) -> None:
         while True:

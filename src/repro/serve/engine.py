@@ -49,12 +49,22 @@ class Request:
     arrival: float = 0.0
     started: float = 0.0
     finished: float = 0.0
+    #: absolute SLO deadline (``time.monotonic`` domain); None = best-effort
+    deadline: Optional[float] = None
     output: list[int] = dataclasses.field(default_factory=list)
     done: Optional[CoopEvent] = None
+    #: arbiter deadline token while posted (set by ``submit``)
+    _dl_token: Optional[int] = None
 
     @property
     def latency(self) -> float:
         return self.finished - self.arrival
+
+    @property
+    def missed(self) -> bool:
+        """True iff the request had an SLO and finished past it."""
+        return (self.deadline is not None and self.finished > 0.0
+                and self.finished > self.deadline)
 
 
 class InferenceServer:
@@ -89,8 +99,24 @@ class InferenceServer:
     def submit(self, req: Request) -> Request:
         req.done = req.done or CoopEvent(self.usf)
         req.arrival = req.arrival or time.monotonic()
+        if req.deadline is not None:
+            # surface the SLO to the job-level arbiter: a DeadlineArbiter
+            # folds it into its EDF/least-laxity grant order (and may fire
+            # an urgent grant if laxity is already negative); the base
+            # SlotArbiter has no post_deadline and the request degrades to
+            # best-effort ordering.
+            post = getattr(self.usf.sched.arbiter, "post_deadline", None)
+            if post is not None:
+                req._dl_token = post(self.job, req.deadline)
         self.queue.put(req)
         return req
+
+    def _retire(self, req: Request) -> None:
+        if req._dl_token is not None:
+            retire = getattr(self.usf.sched.arbiter, "retire_deadline", None)
+            if retire is not None:
+                retire(self.job, req._dl_token)
+            req._dl_token = None
 
     def start(self) -> None:
         # the worker starts through the shared default group (a warm
@@ -183,6 +209,7 @@ class InferenceServer:
                 if remaining[i] <= 0 or pos[i] >= self.max_len - 1:
                     req.finished = time.monotonic()
                     self.served += 1
+                    self._retire(req)
                     req.done.set()
                     active[i] = None
 
@@ -211,17 +238,23 @@ class Gateway:
                 raise UsfTaskError(t, t._exc)
 
     def handle(self, tokens: list[int], max_new: int = 4,
-               timeout: Optional[float] = None) -> dict:
+               timeout: Optional[float] = None,
+               slo: Optional[float] = None) -> dict:
         """Runs on the caller's USF task: submit to every server, wait all.
 
         Polls the response events so a crashed server worker raises
         ``UsfTaskError`` here rather than hanging the request; ``timeout``
-        (wall seconds, whole fan-out) raises ``TimeoutError``."""
+        (wall seconds, whole fan-out) raises ``TimeoutError``. ``slo``
+        (relative seconds) stamps every fanned request with an absolute
+        deadline that a deadline-aware arbiter folds into its grant order;
+        misses are recorded, never enforced."""
         t0 = time.monotonic()
         deadline = None if timeout is None else t0 + timeout
+        dl = None if slo is None else t0 + slo
         reqs = []
         for s in self.servers:
-            r = Request(tokens=list(tokens), max_new=max_new, arrival=t0)
+            r = Request(tokens=list(tokens), max_new=max_new, arrival=t0,
+                        deadline=dl)
             s.submit(r)
             reqs.append(r)
         for r in reqs:
@@ -241,5 +274,8 @@ class Gateway:
             "latency": time.monotonic() - t0,
             "per_server": {s.name: r.latency for s, r in zip(self.servers, reqs)},
         }
+        if slo is not None:
+            rec["slo"] = slo
+            rec["missed"] = any(r.missed for r in reqs)
         self.responses.append(rec)
         return rec

@@ -747,7 +747,9 @@ def test_real_thread_preemptive_policy_time_slices():
         # the second task ran while the first was still spinning
         assert started["b"] - t0 < RECLAIM_BOUND
         assert t1.stats.preemptions + t2.stats.preemptions >= 1
-        assert rt.watchdog.preempts_requested >= 1
+        # either the self-ticking checkpoint path or the watchdog backstop
+        # initiated the slice expiry (the fast path usually wins the race)
+        assert rt.sched.poll_preempts + rt.watchdog.preempts_requested >= 1
     finally:
         rt.shutdown(timeout=5.0)
 

@@ -24,6 +24,13 @@ cross-checked against the model:
   every task is DONE with executor-observed dispatch callbacks equal to
   ``task.stats.dispatches``.
 
+Half the seeds run the whole program under a ``DeadlineArbiter`` with
+mixed traffic — tasks randomly carry deadlines (sometimes overdue on
+arrival, firing the urgent grant path mid-fuzz) and engine-level
+``post_deadline``/``retire_deadline`` obligation churn rides alongside
+the op stream — asserting that EDF tie-breaking, urgency-boosted quotas
+and urgent grants preserve every invariant above bit-for-bit.
+
 Every migration op is classified into the 3x3 matrix of
 (source, destination) group kinds — ``default`` / ``coop`` (dedicated
 cooperative) / ``preempt`` (dedicated preemptive). ``attach`` covers the
@@ -41,6 +48,7 @@ import pytest
 
 from repro.core import simtask as st
 from repro.core.arbiter import ArbiterError
+from repro.core.deadline import DeadlineArbiter
 from repro.core.events import SimExecutor
 from repro.core.policies import SchedCoop, SchedFair, SchedRR
 from repro.core.task import Job, TaskState
@@ -91,7 +99,7 @@ class TaskModel:
         return self.blocks_total - self.wakes_sent
 
 
-def spawn_task(sim, rng, job) -> TaskModel:
+def spawn_task(sim, rng, job, *, deadline=None) -> TaskModel:
     sem = st.SimSemaphore(0)
     ops = []
     n_blocks = 0
@@ -122,8 +130,20 @@ def spawn_task(sim, rng, job) -> TaskModel:
             else:
                 yield st.sem_acquire(sem)
 
-    task = sim.spawn(job, gen)
+    task = sim.spawn(job, gen, deadline=deadline)
     return TaskModel(task, sem, n_blocks)
+
+
+def maybe_deadline(sim, rng):
+    """A task deadline for the DeadlineArbiter seeds: usually a small
+    positive horizon, sometimes already overdue (exercising the urgent
+    grant path mid-fuzz), often absent (mixed traffic)."""
+    k = rng.random()
+    if k < 0.50:
+        return None
+    if k < 0.85:
+        return sim.now() + rng.uniform(0.001, 0.05)
+    return sim.now() - rng.uniform(0.0, 0.01)  # overdue on arrival
 
 
 def deliver_wake(sim, tm: TaskModel) -> None:
@@ -215,8 +235,14 @@ def note_policy_era(sim, job, coop_base) -> None:
 def run_fuzz(seed: int) -> set:
     rng = random.Random(seed)
     n_slots = rng.choice((2, 3, 4, 8))
-    sim = SimExecutor(Topology(n_slots, 1), SchedCoop(quantum=0.01),
-                      max_time=1e9)
+    # half the sweep runs under the DeadlineArbiter with mixed traffic
+    # (deadline and plain tasks, posted-deadline churn): every invariant
+    # below must hold unchanged under EDF tie-breaking and urgent grants
+    use_deadline = seed % 2 == 0
+    default_pol = SchedCoop(quantum=0.01)
+    arb = DeadlineArbiter(default_pol) if use_deadline else None
+    sim = SimExecutor(Topology(n_slots, 1), default_pol,
+                      max_time=1e9, arbiter=arb)
 
     dispatch_counts: Counter = Counter()
     orig_cb = sim.sched._dispatch_cb
@@ -234,9 +260,11 @@ def run_fuzz(seed: int) -> set:
 
     jobs = [Job(f"fz{seed}-{i}") for i in range(rng.randint(2, 4))]
     models: list[TaskModel] = []
+    posted: list = []  # (job, token) obligations awaiting retire
     for job in jobs:
         for _ in range(rng.randint(1, 3)):
-            models.append(spawn_task(sim, rng, job))
+            dl = maybe_deadline(sim, rng) if use_deadline else None
+            models.append(spawn_task(sim, rng, job, deadline=dl))
         note_policy_era(sim, job, coop_base)
     install_i5(sim, i5_violations)
 
@@ -247,7 +275,8 @@ def run_fuzz(seed: int) -> set:
         op = rng.random()
         job = rng.choice(jobs)
         if op < 0.18:  # spawn more work
-            models.append(spawn_task(sim, rng, job))
+            dl = maybe_deadline(sim, rng) if use_deadline else None
+            models.append(spawn_task(sim, rng, job, deadline=dl))
         elif op < 0.38:  # wake a blocked-or-soon-blocking task
             owed = [m for m in models if m.wakes_owed > 0]
             if owed:
@@ -301,6 +330,19 @@ def run_fuzz(seed: int) -> set:
         else:  # let virtual time run
             advance(rng.uniform(0.001, 0.01))
 
+        # deadline-seed rider: engine-level posted-obligation churn (the
+        # serve-gateway pattern) interleaved with everything above —
+        # posts are sometimes already overdue, firing the urgent path
+        # mid-fuzz; retires hit both heap-top and out-of-order tokens
+        if use_deadline and rng.random() < 0.25:
+            darb = sim.sched.arbiter
+            if posted and rng.random() < 0.5:
+                j, tok = posted.pop(rng.randrange(len(posted)))
+                darb.retire_deadline(j, tok)
+            else:
+                dl = sim.now() + rng.uniform(-0.005, 0.05)
+                posted.append((job, darb.post_deadline(job, dl)))
+
         advance(rng.uniform(0.0005, 0.004))
         # dynamic re-registration closes the detach edge of the matrix
         for jid, src in list(detached_kind.items()):
@@ -313,7 +355,10 @@ def run_fuzz(seed: int) -> set:
         check_model(sim, jobs, coop_base)
         assert not i5_violations, f"seed {seed}: {i5_violations[:3]}"
 
-    # drain: deliver every owed wake, then run to completion
+    # drain: retire outstanding obligations, deliver every owed wake,
+    # then run to completion
+    for j, tok in posted:
+        sim.sched.arbiter.retire_deadline(j, tok)
     for tm in models:
         while tm.wakes_owed > 0:
             deliver_wake(sim, tm)
