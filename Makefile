@@ -1,9 +1,10 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test test-all bench-sched-ops bench-colocation \
-	bench-multiprocess bench-multiprocess-smoke bench-faults \
-	bench-faults-smoke bench-microservices bench-slo-smoke
+.PHONY: check test test-all bench-all bench-all-smoke bench-sched-ops \
+	bench-colocation bench-multiprocess bench-multiprocess-smoke \
+	bench-faults bench-faults-smoke bench-microservices bench-slo-smoke \
+	bench-trace bench-trace-smoke
 
 ## check: the fast CI gate — clean-collecting tier-1 tests (slow ones are
 ## deselected via pyproject addopts; the chaos smoke seeds ride along) +
@@ -13,11 +14,14 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 ## BENCH_sched_ops.json baseline — plus the cross-process broker benchmark
 ## in smoke mode (machinery end-to-end; the >=1.5x ratio is asserted only
 ## in the full nightly run), the fault-recovery benchmark in smoke mode
-## (broker-kill MTTR + grant-convergence machinery) and the open-arrival
+## (broker-kill MTTR + grant-convergence machinery), the open-arrival
 ## SLO load-generator in smoke mode (deadline-aware vs share-only A/B
 ## machinery; the win criteria are asserted on the full nightly sweep)
+## and the trace-replay bench in smoke mode, perf-gated: replay events/s
+## within 30% of the committed BENCH_trace_replay.json baseline (the
+## gated replay runs the full-size trace even under --smoke)
 check: test bench-sched-ops bench-multiprocess-smoke bench-faults-smoke \
-	bench-slo-smoke
+	bench-slo-smoke bench-trace-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -52,3 +56,18 @@ bench-microservices:
 bench-slo-smoke:
 	$(PY) -m benchmarks.microservices --slo-only --smoke \
 		--out BENCH_microservices.smoke.json
+
+## trace record/replay: gated replay throughput + recorder overhead +
+## determinism + the replayer-backed SLO A/B (full sweep is nightly)
+bench-trace:
+	$(PY) -m benchmarks.trace_replay --gate BENCH_trace_replay.json
+
+bench-trace-smoke:
+	$(PY) -m benchmarks.trace_replay --smoke --gate BENCH_trace_replay.json
+
+## every benchmark module through the unified runner (benchmarks/run.py)
+bench-all:
+	$(PY) -m benchmarks.run --all
+
+bench-all-smoke:
+	$(PY) -m benchmarks.run --all --smoke

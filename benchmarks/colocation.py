@@ -30,7 +30,7 @@ import argparse
 import json
 import sys
 
-from benchmarks.common import summarize_latencies
+from benchmarks.common import default_out, summarize_latencies, write_artifact
 from repro.core import simtask as st
 from repro.core.events import SimExecutor
 from repro.core.policies import SchedCoop, SchedFair
@@ -124,7 +124,9 @@ def _run_resize_cell(*, horizon: float) -> dict:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--out", default="BENCH_colocation.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_colocation.json, "
+                         "or BENCH_colocation.smoke.json with --smoke)")
     ap.add_argument("--smoke", action="store_true",
                     help="short horizon; checks the bench runs")
     args = ap.parse_args(argv)
@@ -160,10 +162,7 @@ def main(argv=None) -> int:
         "borrowing": borrow,
         "elastic_resize": resize,
     }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"wrote {args.out}")
+    write_artifact(default_out("colocation", args.smoke, args.out), payload)
     return 0
 
 

@@ -168,3 +168,24 @@ def summarize_latencies(latencies: Iterable[float], *, prefix: str = "",
     if prefix:
         s = {f"{prefix}{k}": v for k, v in s.items()}
     return s
+
+
+def default_out(bench: str, smoke: bool, override=None) -> str:
+    """One naming convention for every benchmark artifact: the committed
+    baseline is ``BENCH_<bench>.json``, smoke runs write the gitignored
+    ``BENCH_<bench>.smoke.json`` (CI uploads both shapes by glob)."""
+    if override:
+        return override
+    return f"BENCH_{bench}.smoke.json" if smoke else f"BENCH_{bench}.json"
+
+
+def write_artifact(out: str, payload: dict) -> str:
+    """Dump a benchmark payload the way every harness does: 2-space
+    indent, trailing newline, a ``wrote <path>`` line for the CI log."""
+    import json
+
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}")
+    return out

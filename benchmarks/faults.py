@@ -27,14 +27,13 @@ pass/fail invariants.
 from __future__ import annotations
 
 import argparse
-import json
 import multiprocessing as mp
 import os
 import sys
 import tempfile
 import time
 
-from benchmarks.common import summarize_latencies
+from benchmarks.common import default_out, summarize_latencies, write_artifact
 
 _CTX = mp.get_context("spawn")
 
@@ -209,8 +208,7 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="fewer repetitions: proves the machinery")
     args = ap.parse_args(argv)
-    out = args.out or ("BENCH_faults.smoke.json" if args.smoke
-                       else "BENCH_faults.json")
+    out = default_out("faults", args.smoke, args.out)
     reps = 2 if args.smoke else 5
     events = 6 if args.smoke else 20
 
@@ -231,10 +229,7 @@ def main(argv=None) -> int:
             "grant_convergence": conv,
         },
     }
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"wrote {out}")
+    write_artifact(out, payload)
     return 0
 
 

@@ -33,7 +33,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import sys
 from typing import Optional
 
@@ -42,10 +41,12 @@ import numpy as np
 from benchmarks.common import (
     STACKS,
     StackConfig,
+    default_out,
     inner_region,
     make_executor,
     stack_policy,
     summarize_latencies,
+    write_artifact,
 )
 from repro.core import simtask as st
 from repro.core.deadline import DeadlineArbiter
@@ -406,8 +407,7 @@ def main(argv=None) -> int:
                     help="run only the open-arrival SLO sweep (skip the "
                          "Fig. 4 scenario grid)")
     args = ap.parse_args(argv)
-    out = args.out or ("BENCH_microservices.smoke.json" if args.smoke
-                       else "BENCH_microservices.json")
+    out = default_out("microservices", args.smoke, args.out)
     rates = args.rates if args.rates else ([0.33] if args.smoke else RATES)
 
     if args.slo_only:
@@ -415,10 +415,7 @@ def main(argv=None) -> int:
                             n_requests=150 if args.smoke else 800)
         payload = {"bench": "microservices", "smoke": args.smoke,
                    "slo_only": True, "slo_sweep": slo}
-        with open(out, "w") as f:
-            json.dump(payload, f, indent=2)
-            f.write("\n")
-        print(f"wrote {out}")
+        write_artifact(out, payload)
         return 0
 
     print("scenario,rate,throughput,lat_mean,lat_p95,completed")
@@ -477,10 +474,7 @@ def main(argv=None) -> int:
         "rows": [{k: v for k, v in r.items() if k != "logs"} for r in rows],
         "slo_sweep": slo,
     }
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"wrote {out}")
+    write_artifact(out, payload)
     return 0
 
 

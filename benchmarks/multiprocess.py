@@ -34,11 +34,12 @@ proves the machinery end-to-end).
 from __future__ import annotations
 
 import argparse
-import json
 import multiprocessing as mp
 import os
 import sys
 import time
+
+from benchmarks.common import default_out, write_artifact
 
 _CTX = mp.get_context("spawn")
 
@@ -159,7 +160,9 @@ def _run_colocation(mode: str, *, phases_per_proc, n: int,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--out", default="BENCH_multiprocess.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_multiprocess.json, "
+                         "or BENCH_multiprocess.smoke.json with --smoke)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny work: proves the machinery, skips the "
                          "ratio assertion (CI hosts are noisy)")
@@ -223,10 +226,7 @@ def main(argv=None) -> int:
             },
         },
     }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"wrote {args.out}")
+    write_artifact(default_out("multiprocess", args.smoke, args.out), payload)
     if not args.smoke and speedup < 1.5:
         print(f"FAIL: broker-coordinated speedup {speedup:.2f}x < 1.5x",
               file=sys.stderr)

@@ -1,10 +1,20 @@
-"""Benchmark aggregator — one function per paper table/figure.
+"""Benchmark entry point — CSV aggregator + unified ``--all`` runner.
 
-Prints ``name,us_per_call,derived`` CSV: us_per_call is the representative
-cell's simulated makespan (µs of virtual time per workload run — the
-quantity the paper measures), derived is the headline claim metric.
+Default mode prints ``name,us_per_call,derived`` CSV: us_per_call is the
+representative cell's simulated makespan (µs of virtual time per workload
+run — the quantity the paper measures), derived is the headline claim
+metric.
 
-Full sweeps live in the individual modules:
+``--all`` discovers every benchmark module in this package and runs each
+module's ``main()`` in sequence (``--smoke`` forwards the smoke flag to
+modules that take argv). This replaces per-bench ``__main__`` invocation
+lists in the Makefile/CI with one entry point:
+
+    python -m benchmarks.run                  # legacy CSV aggregator
+    python -m benchmarks.run --all --smoke    # every bench, smoke-sized
+    python -m benchmarks.run --all --only faults,trace_replay
+
+Full sweeps still live in the individual modules:
     python -m benchmarks.matmul_heatmap          (Fig. 3)
     python -m benchmarks.cholesky_compositions   (Table 2)
     python -m benchmarks.microservices           (Fig. 4)
@@ -14,6 +24,11 @@ Full sweeps live in the individual modules:
 
 from __future__ import annotations
 
+import argparse
+import importlib
+import inspect
+import pkgutil
+import sys
 import time
 
 
@@ -134,18 +149,107 @@ def bench_roofline() -> list[tuple[str, float, str]]:
     return rows[:12]  # headline rows; full table via benchmarks.roofline
 
 
-def main() -> None:
+def run_csv() -> int:
+    """Legacy aggregator: one CSV row per paper table/figure cell."""
     print("name,us_per_call,derived")
     for fn in (bench_matmul_fig3, bench_cholesky_table2,
                bench_microservices_fig4, bench_ensembles_fig5,
                bench_kernels, bench_roofline):
-        t0 = time.time()
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception as e:  # noqa: BLE001
             print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}", flush=True)
+    return 0
+
+
+# Not benchmark modules: this runner and the shared helper library.
+_SKIP = {"common", "run"}
+
+
+def discover() -> list[str]:
+    """All benchmark module names in this package, alphabetical."""
+    import benchmarks
+
+    return sorted(
+        m.name for m in pkgutil.iter_modules(benchmarks.__path__)
+        if m.name not in _SKIP and not m.name.startswith("_"))
+
+
+def _takes_argv(main_fn) -> bool:
+    try:
+        return len(inspect.signature(main_fn).parameters) > 0
+    except (TypeError, ValueError):
+        return False
+
+
+def run_all(*, smoke: bool, only: list[str] | None = None) -> int:
+    """Run every discovered bench module's ``main()`` in sequence.
+
+    Modules whose ``main`` takes argv get ``--smoke`` forwarded in smoke
+    mode; bare-``main()`` modules (fixed-size paper sweeps) only run in
+    full mode — smoke skips them, since they have no small shape.
+    """
+    names = discover()
+    if only:
+        missing = sorted(set(only) - set(names))
+        if missing:
+            print(f"unknown benchmarks: {', '.join(missing)} "
+                  f"(have: {', '.join(names)})", file=sys.stderr)
+            return 2
+        names = [n for n in names if n in only]
+    failures = []
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        main_fn = getattr(mod, "main", None)
+        if main_fn is None:
+            print(f"== {name}: skipped (no main())", flush=True)
+            continue
+        if not _takes_argv(main_fn):
+            if smoke:
+                print(f"== {name}: skipped in smoke mode (full-size "
+                      f"sweep only)", flush=True)
+                continue
+            argv = None
+        else:
+            argv = ["--smoke"] if smoke else []
+        t0 = time.monotonic()
+        print(f"== {name} ==", flush=True)
+        try:
+            rc = main_fn() if argv is None else main_fn(argv)
+        except Exception as e:  # noqa: BLE001
+            print(f"== {name}: ERROR {type(e).__name__}: {e}",
+                  file=sys.stderr, flush=True)
+            failures.append(name)
+            continue
+        dt = time.monotonic() - t0
+        if rc not in (0, None):
+            failures.append(name)
+        print(f"== {name}: {'FAIL' if rc not in (0, None) else 'ok'} "
+              f"({dt:.1f}s)", flush=True)
+    if failures:
+        print(f"failed: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--all", action="store_true",
+                    help="run every benchmark module (default: legacy "
+                         "CSV aggregator)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --all: forward --smoke to each bench")
+    ap.add_argument("--only", default=None,
+                    help="with --all: comma-separated subset of modules")
+    args = ap.parse_args(argv)
+    if not args.all:
+        if args.smoke or args.only:
+            ap.error("--smoke/--only require --all")
+        return run_csv()
+    only = args.only.split(",") if args.only else None
+    return run_all(smoke=args.smoke, only=only)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main(sys.argv[1:]))

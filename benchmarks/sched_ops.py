@@ -44,6 +44,8 @@ import time
 from collections import deque
 from types import SimpleNamespace
 
+from benchmarks.common import default_out, write_artifact
+
 from repro.core.arbiter import SlotArbiter
 from repro.core.policies import SchedCoop, SchedFair, SchedRR
 from repro.core.policies.base import StopReason
@@ -466,7 +468,9 @@ def check_gate(results: dict, baseline_path: str, max_drop: float) -> list[str]:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--out", default="BENCH_sched_ops.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_sched_ops.json, "
+                         "or BENCH_sched_ops.smoke.json with --smoke)")
     ap.add_argument("--ready", type=int, default=256,
                     help="ready-pool size for the policy-op benchmarks")
     ap.add_argument("--slots", type=int, default=16)
@@ -551,10 +555,7 @@ def main(argv=None) -> int:
         "platform": platform.platform(),
         "results": results,
     }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"wrote {args.out}")
+    write_artifact(default_out("sched_ops", args.smoke, args.out), payload)
 
     if args.gate:
         failures = check_gate(results, args.gate, args.gate_drop)

@@ -1,0 +1,484 @@
+"""Trace record/replay benchmark — the simulation-substrate perf gate.
+
+Measures the four properties the trace subsystem claims:
+
+  * **replay throughput** (``trace.replay_events_per_sec``, GATED): engine
+    events drained per wall second replaying the synthesized ≈1.36M-event
+    colocation trace under the default SCHED_COOP config — the
+    ≥500k events/s substrate number. Best-of-N on an otherwise-idle host;
+    the CI gate compares against the committed baseline at a 30% band.
+    The same trace under SCHED_FAIR is reported ungated (tick/EEVDF
+    overhead makes it a different regime, tracked not gated).
+  * **decode throughput**: records/s loading a saved workload trace from
+    JSONL back into replayable form (the batch-decode path).
+  * **recorder overhead**: interleaved A/B ratios — disarmed-vs-disarmed
+    (the noise floor, ~1.0x by construction: disarmed runs carry no
+    recorder code on the op path at all), armed-vs-disarmed on a
+    dispatch-heavy live sim (the decision-hook cost on the pick/dispatch
+    cycle — the <5% criterion), and armed-vs-disarmed on the full replay
+    (op recording included; informational).
+  * **determinism**: same trace + same config replayed twice ⇒
+    bit-identical decision streams, and record→reconstruct→replay is a
+    fixed point. Asserted on every run, including smoke.
+
+Plus the **policy A/B**: the PR 7 open-arrival SLO sweep rebuilt on the
+replayer — one workload per offered load, replayed under deadline-aware
+vs share-only arbitration (the only changed variable), 10⁵ requests per
+cell in the full run — reproducing the deadline-aware-wins headline from
+replayed traces.
+
+    PYTHONPATH=src python -m benchmarks.trace_replay            # full
+    PYTHONPATH=src python -m benchmarks.trace_replay --smoke    # CI smoke
+    PYTHONPATH=src python -m benchmarks.trace_replay --smoke \
+        --gate BENCH_trace_replay.json                          # perf gate
+
+Writes ``BENCH_trace_replay.json`` (``--out`` overrides). Wall-clock
+numbers are machine-dependent; compare ratios on the same host.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+
+from benchmarks.common import default_out, summarize_latencies, write_artifact
+from repro.trace import ReplayConfig, Replayer, TraceRecorder, reconstruct
+from repro.trace import synth
+from repro.trace.ab import measure_side, slo_ab_configs
+from repro.trace.replayer import Workload, diff_streams
+
+GATED_KEYS = ("trace.replay_events_per_sec",)
+GATE_DROP_OVERRIDES: dict = {}
+
+#: smoke-sized colocation trace (~88k events, sub-second replay)
+SMOKE_SHAPE = dict(n_requests=2_000, rate=250.0, batch_segments=600)
+
+
+def _colo(smoke: bool) -> Workload:
+    return synth.colocation_workload(**(SMOKE_SHAPE if smoke else {}))
+
+
+# --------------------------------------------------------------------- #
+# replay throughput
+# --------------------------------------------------------------------- #
+def bench_replay(workload: Workload, config: ReplayConfig,
+                 *, repeat: int = 3) -> dict:
+    """Best-of-``repeat``: replay is deterministic, so run-to-run spread
+    is host noise and the max is the least-noisy estimate (same
+    reasoning as sched_ops.bench_sim_events)."""
+    best = None
+    for _ in range(max(1, repeat)):
+        res = Replayer(workload, config).run()
+        if best is None or res.events_per_sec > best.events_per_sec:
+            best = res
+    return {"events_per_sec": best.events_per_sec, "events": best.events,
+            "wall_s": round(best.wall_s, 4), "tasks": len(workload.tasks),
+            "ops": workload.n_ops(), "repeat": repeat,
+            "policy": config.default_policy[0]}
+
+
+# --------------------------------------------------------------------- #
+# decode throughput
+# --------------------------------------------------------------------- #
+def bench_decode(workload: Workload) -> dict:
+    """Save the workload to JSONL, then time the load (parse + batch
+    decode into replayable op tuples)."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.jsonl")
+        n = workload.save(path)
+        size = os.path.getsize(path)
+        t0 = time.perf_counter()
+        loaded = Workload.load(path)
+        dt = time.perf_counter() - t0
+    assert len(loaded.tasks) == len(workload.tasks)
+    return {"records": n, "ops": loaded.n_ops(),
+            "records_per_sec": n / dt, "ops_per_sec": loaded.n_ops() / dt,
+            "bytes": size, "wall_s": round(dt, 4)}
+
+
+# --------------------------------------------------------------------- #
+# recorder overhead
+# --------------------------------------------------------------------- #
+def _decisions_only(rep: Replayer):
+    """Replay with decision hooks armed but op recording off (the live
+    monitoring configuration)."""
+    rec = TraceRecorder()
+    # mirror Replayer.run(record=True) but arm decisions only
+    orig_attach = rec.attach_sim
+    rec.attach_sim = lambda sim, ops=True: orig_attach(sim, ops=False)
+    try:
+        return rep.run(recorder=rec)
+    finally:
+        rec.attach_sim = orig_attach
+
+
+def bench_recorder_overhead(workload: Workload, config: ReplayConfig,
+                            *, rounds: int = 3) -> dict:
+    """Interleaved A/B: alternate configurations round by round so slow
+    host drift hits both sides equally; compare best-of-rounds."""
+    disarmed_a, disarmed_b, decisions, full = [], [], [], []
+    rep = Replayer(workload, config)
+    for _ in range(max(1, rounds)):
+        disarmed_a.append(rep.run().events_per_sec)
+        decisions.append(_decisions_only(rep).events_per_sec)
+        full.append(rep.run(record=True).events_per_sec)
+        disarmed_b.append(rep.run().events_per_sec)
+    da, db = max(disarmed_a), max(disarmed_b)
+    dec, fl = max(decisions), max(full)
+    return {
+        # disarmed vs disarmed: the noise floor (~1.0 by construction —
+        # the disarmed op path carries no recorder code at all)
+        "disarmed_ab_ratio": round(da / db, 4),
+        "events_per_sec_disarmed": max(da, db),
+        # decision hooks only: the armed cost on the pick/dispatch cycle
+        "events_per_sec_decisions": dec,
+        "decision_overhead_frac": round(1.0 - dec / max(da, db), 4),
+        # full op recording: the replayable-trace configuration
+        "events_per_sec_armed_full": fl,
+        "full_overhead_frac": round(1.0 - fl / max(da, db), 4),
+        "rounds": rounds,
+    }
+
+
+def _emit_ns_per_record(*, n: int = 1_000_000, repeat: int = 5) -> float:
+    """Tight-loop cost of one armed decision record — tuple build + the
+    memory-mode ``emit`` (a bare C-level ``deque.append``). This is the
+    per-record cost the hot paths actually pay, and unlike the live A/B it
+    is measurable to a few ns on a noisy host (best-of-``repeat``)."""
+    rec = TraceRecorder()
+    emit = rec.emit
+    best = float("inf")
+    for _ in range(max(1, repeat)):
+        rec._ring.clear()
+        t0 = time.process_time()
+        for i in range(n):
+            emit((0.5, 2, i, 7))
+        best = min(best, time.process_time() - t0)
+    rec._ring.clear()
+    return best / n * 1e9
+
+
+def bench_armed_pick_cycle(*, duration_s: float = 0.25,
+                           repeat: int = 10) -> dict:
+    """The <5% criterion, measured where the hook lives: a dispatch-heavy
+    yield-churn sim (every event crosses ``_run_on``/``_stop_running``,
+    the recorded pick cycle — 2 decision records per event, the worst
+    case) armed with decision hooks vs disarmed.
+
+    The armed side runs the real streaming configuration — a file-backed
+    recorder whose background writer drains the ring — so the producer
+    pays exactly the hot-path cost (tuple + C-level append) and drained
+    tuples are recycled by the allocator, as in a live monitored run
+    (memory mode retains every record, which measurably inflates armed
+    allocation cost and is NOT how monitoring deployments run).
+
+    The effect is a few percent and this host's A/B jitter is ±5-10%
+    even with scheduler-thread CPU time (``time.thread_time`` — charges
+    the hot path, not the background flusher on its own core), GC paused
+    across each timed region, alternating back-to-back pairs, and a
+    SUM-over-SUM aggregate ratio — the live A/B cannot resolve a 4%
+    effect under that floor, so it is reported raw (with its per-pair
+    spread) as corroboration. The headline ``overhead_frac`` is instead
+    the DECOMPOSITION, every factor of which is directly measured and
+    stable to a few tenths of a percent:
+
+        records/event (counted in the armed runs)
+          x ns/record  (tight-loop cost of the actual armed emit)
+          x disarmed events/s
+
+    i.e. exactly the extra scheduler-thread CPU the armed hooks add per
+    event, at the rate the disarmed hot path actually runs."""
+    import gc
+    import os
+    import statistics
+    import tempfile
+
+    from repro.core import simtask as st
+    from repro.core.events import SimExecutor
+    from repro.core.policies import SchedCoop
+    from repro.core.task import Job
+    from repro.core.topology import Topology
+
+    def build(n_iters: int):
+        sim = SimExecutor(Topology(8, 2), SchedCoop(quantum=0.02),
+                          max_time=1e9)
+        job = Job("churn")
+
+        def body():
+            for _ in range(n_iters):
+                yield st.compute(0.0005)
+                yield st.yield_()
+
+        for _ in range(32):
+            sim.spawn(job, body)
+        return sim
+
+    def timed_run(n_iters: int, armed: bool):
+        sim = build(n_iters)
+        rec = tmp = None
+        if armed:
+            fd, tmp = tempfile.mkstemp(suffix=".jsonl")
+            os.close(fd)
+            rec = TraceRecorder(tmp).attach_sim(sim, ops=False)
+        gc_was_on = gc.isenabled()
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.thread_time()
+            sim.run()
+            dt = time.thread_time() - t0
+        finally:
+            if gc_was_on:
+                gc.enable()
+            n_rec = 0
+            if rec is not None:
+                rec.close()  # flushes: emitted == total records
+                n_rec = rec.emitted
+                os.unlink(tmp)
+        return sim.events_processed, dt, n_rec
+
+    # size each timed region to ~duration_s from a quick probe
+    probe = build(50)
+    t0 = time.perf_counter()
+    probe.run()
+    dt = time.perf_counter() - t0
+    n_iters = max(100, int(50 * duration_s / dt))
+
+    timed_run(n_iters, False)  # warm caches/allocator before measuring
+    timed_run(n_iters, True)
+    ev = {False: 0, True: 0}
+    cpu = {False: 0.0, True: 0.0}
+    records = 0
+    ratios = []
+    for rnd in range(max(1, repeat)):
+        order = (False, True) if rnd % 2 == 0 else (True, False)
+        pair = {}
+        for is_armed in order:
+            n, dt, n_rec = timed_run(n_iters, is_armed)
+            ev[is_armed] += n
+            cpu[is_armed] += dt
+            records += n_rec
+            pair[is_armed] = n / dt
+        ratios.append(pair[True] / pair[False])
+    d = ev[False] / cpu[False]
+    a = ev[True] / cpu[True]
+    ns_rec = _emit_ns_per_record()
+    rec_per_ev = records / ev[True]
+    return {"events_per_sec_disarmed": d, "events_per_sec_armed": a,
+            # headline: the measured decomposition (see docstring)
+            "overhead_frac": round(rec_per_ev * ns_rec * 1e-9 * d, 4),
+            "ns_per_record": round(ns_rec, 1),
+            "records_per_event": round(rec_per_ev, 3),
+            # the raw live A/B, for corroboration — noise floor ±5-10%
+            # on this host, so do not gate on it
+            "live_ab_overhead_frac": round(1.0 - a / d, 4),
+            "round_ratios": [round(x, 4) for x in ratios],
+            "ratio_spread": round(statistics.pstdev(ratios), 4),
+            "repeat": repeat}
+
+
+# --------------------------------------------------------------------- #
+# determinism
+# --------------------------------------------------------------------- #
+def bench_determinism(workload: Workload, config: ReplayConfig) -> dict:
+    """Replay twice and diff; then reconstruct the re-recording into a
+    workload, replay THAT, and check the fixed point. Raises on any
+    divergence — determinism is an assertion, not a statistic."""
+    r1 = Replayer(workload, config).run(record=True)
+    r2 = Replayer(workload, config).run(record=True)
+    d = diff_streams(r1.normalized_records(), r2.normalized_records())
+    if d is not None:
+        raise AssertionError(f"replay-replay divergence: {d}")
+
+    wl2 = reconstruct(r1.recorder.records())
+    r3 = Replayer(wl2, config).run(record=True)
+    # r3's trace ids are r1's live ids; fold back into workload id space
+    from repro.trace.replayer import normalize_stream
+    rec3 = normalize_stream(r3.normalized_records(), r1.tid_of, r1.jid_of)
+    d = diff_streams(r1.normalized_records(), rec3)
+    if d is not None:
+        raise AssertionError(f"record->reconstruct->replay diverged: {d}")
+    from repro.trace.replayer import decision_stream
+    return {"decisions": len(decision_stream(r1.normalized_records())),
+            "events": r1.events, "fixed_point": True}
+
+
+# --------------------------------------------------------------------- #
+# policy A/B: the SLO sweep, replayed
+# --------------------------------------------------------------------- #
+def run_slo_ab(loads, *, n_requests: int, seed: int = 0) -> dict:
+    """The PR 7 sweep on the replayer: per offered load, ONE workload
+    replayed under deadline-aware vs share-only arbitration."""
+    cfg_dl, cfg_sh = slo_ab_configs()
+    rows, wins = [], []
+    print("arbiter,load,requests,lat_p99,miss_rate,events,kev_s")
+    for load in loads:
+        wl = synth.slo_workload(load, n_requests=n_requests, seed=seed)
+        horizon = wl.meta["horizon"]
+        pair = {}
+        for name, cfg in (("deadline", cfg_dl), ("share", cfg_sh)):
+            side = measure_side(name, wl, cfg, until=horizon + 5.0)
+            lat = summarize_latencies(side.latencies, prefix="lat_")
+            row = {"arbiter": name, "load": load,
+                   "requests": side.deadline_tasks,
+                   "completed": side.completed,
+                   "miss_rate": round(side.miss_rate, 5),
+                   "preemptions": side.preemptions,
+                   "urgent_grants": side.urgent_grants,
+                   "makespan": round(side.makespan, 3),
+                   "events": side.events,
+                   "replay_events_per_sec": round(
+                       side.events / side.wall_s if side.wall_s else 0.0),
+                   **lat}
+            rows.append(row)
+            pair[name] = row
+            print(f"{name},{load},{n_requests},{row['lat_p99']:.4f},"
+                  f"{row['miss_rate']:.4f},{row['events']},"
+                  f"{row['replay_events_per_sec'] / 1000:.0f}",
+                  flush=True)
+        d, s = pair["deadline"], pair["share"]
+        wins.append({
+            "load": load,
+            "p99_ratio": (round(s["lat_p99"] / d["lat_p99"], 3)
+                          if d["lat_p99"] > 0 else None),
+            "deadline_wins_p99": bool(d["lat_p99"] < s["lat_p99"]),
+            "deadline_wins_miss": bool(d["miss_rate"] <= s["miss_rate"]),
+        })
+    n_wins = sum(1 for w in wins
+                 if w["deadline_wins_p99"] and w["deadline_wins_miss"])
+    print(f"# deadline-aware wins p99 AND miss rate at {n_wins}/"
+          f"{len(loads)} replayed offered-load points")
+    return {"loads": list(loads), "n_requests": n_requests,
+            "rows": rows, "per_load": wins, "deadline_wins_both": n_wins}
+
+
+# --------------------------------------------------------------------- #
+# gate + main
+# --------------------------------------------------------------------- #
+def load_baseline(baseline_path: str) -> dict:
+    """Read the committed baseline up front — a full run's default out
+    path IS the baseline path, so reading after write_artifact would
+    gate the run against itself."""
+    with open(baseline_path) as f:
+        return json.load(f)["results"]
+
+
+def check_gate(results: dict, baseline: dict, max_drop: float) -> list:
+    failures = []
+    for key in GATED_KEYS:
+        base, cur = baseline.get(key), results.get(key)
+        if base is None or cur is None:
+            continue
+        drop = GATE_DROP_OVERRIDES.get(key, max_drop)
+        floor = (1.0 - drop) * base["events_per_sec"]
+        verdict = "ok" if cur["events_per_sec"] >= floor else "FAIL"
+        print(f"gate {key}: {cur['events_per_sec']:,.0f} ev/s vs baseline "
+              f"{base['events_per_sec']:,.0f} (floor {floor:,.0f}) {verdict}")
+        if cur["events_per_sec"] < floor:
+            failures.append(
+                f"{key} dropped >{drop:.0%}: {cur['events_per_sec']:,.0f} "
+                f"< {floor:,.0f} ev/s (baseline {base['events_per_sec']:,.0f})"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_trace_replay.json, or "
+                         "BENCH_trace_replay.smoke.json with --smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace + tiny SLO cell; checks everything "
+                         "runs and the gate, not absolute perf")
+    ap.add_argument("--gate", metavar="BASELINE_JSON", default=None,
+                    help="fail (exit 1) if replay throughput drops more "
+                         "than --gate-drop below this baseline (the gated "
+                         "bench runs the FULL trace even with --smoke)")
+    ap.add_argument("--gate-drop", type=float, default=0.30)
+    ap.add_argument("--slo-requests", type=int, default=None,
+                    help="requests per SLO cell (default 100000 full, "
+                         "300 smoke)")
+    args = ap.parse_args(argv)
+    out = default_out("trace_replay", args.smoke, args.out)
+    baseline = load_baseline(args.gate) if args.gate else None
+
+    results: dict = {}
+    coop = ReplayConfig(slots=8, domains=2)
+
+    # gated replay throughput: ALWAYS the full trace (a gate on the smoke
+    # trace would measure startup, not the substrate)
+    gated_full = not args.smoke or args.gate is not None
+    wl_gate = _colo(smoke=not gated_full)
+    r = bench_replay(wl_gate, coop, repeat=3 if gated_full else 1)
+    results["trace.replay_events_per_sec"] = r
+    print(f"trace.replay_events_per_sec: {r['events_per_sec']:,.0f} ev/s "
+          f"({r['events']:,} events, best of {r['repeat']}, SCHED_COOP)")
+
+    wl_small = _colo(smoke=True) if args.smoke else wl_gate
+    if not args.smoke:
+        fair = ReplayConfig(slots=8, domains=2,
+                            default_policy=("SCHED_FAIR", 0.003))
+        r = bench_replay(wl_small, fair, repeat=2)
+        results["trace.replay_events_per_sec_fair"] = r
+        print(f"trace.replay_events_per_sec_fair: "
+              f"{r['events_per_sec']:,.0f} ev/s (ungated: tick/EEVDF "
+              f"regime)")
+
+    r = bench_decode(wl_small)
+    results["trace.decode_records_per_sec"] = r
+    print(f"trace.decode_records_per_sec: {r['records_per_sec']:,.0f} "
+          f"records/s ({r['ops']:,} ops, {r['bytes'] / 1e6:.1f} MB)")
+
+    r = bench_recorder_overhead(wl_small, coop,
+                                rounds=1 if args.smoke else 3)
+    results["trace.recorder_overhead"] = r
+    print(f"trace.recorder_overhead: disarmed A/B "
+          f"{r['disarmed_ab_ratio']:.3f}x, decisions "
+          f"{r['decision_overhead_frac']:+.1%}, full op recording "
+          f"{r['full_overhead_frac']:+.1%}")
+
+    r = bench_armed_pick_cycle(duration_s=0.1 if args.smoke else 0.25,
+                               repeat=3 if args.smoke else 10)
+    results["trace.armed_pick_cycle"] = r
+    print(f"trace.armed_pick_cycle: armed decision hooks cost "
+          f"{r['overhead_frac']:+.1%} on a dispatch-heavy live sim "
+          f"({r['records_per_event']:.1f} rec/event x "
+          f"{r['ns_per_record']:.0f} ns/rec; <5% criterion; live A/B "
+          f"{r['live_ab_overhead_frac']:+.1%} +/- "
+          f"{r['ratio_spread']:.1%} noise)")
+
+    r = bench_determinism(_colo(smoke=True), coop)
+    results["trace.determinism"] = r
+    print(f"trace.determinism: replay-replay and record->reconstruct->"
+          f"replay bit-identical ({r['decisions']:,} decisions)")
+
+    n_req = args.slo_requests or (300 if args.smoke else 100_000)
+    loads = [0.8] if args.smoke else [0.6, 0.8, 0.95, 1.1]
+    results["trace.slo_ab"] = run_slo_ab(loads, n_requests=n_req)
+
+    payload = {
+        "bench": "trace_replay",
+        "smoke": args.smoke,
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "results": results,
+    }
+    write_artifact(out, payload)
+
+    if baseline is not None:
+        failures = check_gate(results, baseline, args.gate_drop)
+        if failures:
+            for msg in failures:
+                print(f"PERF GATE FAILURE: {msg}", file=sys.stderr)
+            return 1
+        print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -489,6 +489,10 @@ class SlotArbiter:
         if lock is not None:
             with lock:
                 lease.share = share
+                rec = getattr(sched, "_rec", None)
+                if rec is not None:
+                    from repro.core.scheduler import REC_RESIZE
+                    rec((sched.clock(), REC_RESIZE, lease.job.jid, share))
                 self._recompute_quotas()
                 # grant path: newly entitled capacity admits queued work now
                 sched._fill_idle_slots(sched.clock())

@@ -100,11 +100,19 @@ class DeadlineArbiter(SlotArbiter):
         if heap is None:
             heap = self._posted[job.jid] = []
         heappush(heap, (float(deadline), token))
+        rec = getattr(self.sched, "_rec", None)
+        if rec is not None:
+            from repro.core.scheduler import REC_DL_POST
+            rec((self.sched.clock(), REC_DL_POST, job.jid, float(deadline)))
         self._maybe_urgent(job)
         return token
 
     def retire_deadline(self, job: Job, token: int) -> None:
         """Withdraw a posted obligation (request completed/cancelled)."""
+        rec = getattr(self.sched, "_rec", None)
+        if rec is not None:
+            from repro.core.scheduler import REC_DL_RETIRE
+            rec((self.sched.clock(), REC_DL_RETIRE, job.jid, token))
         heap = self._posted.get(job.jid)
         if not heap:
             return

@@ -36,7 +36,7 @@ from typing import Any, Callable, Optional
 from repro.core.adaptive import SliceController
 from repro.core.arbiter import SlotArbiter
 from repro.core.policies.base import Policy
-from repro.core.scheduler import Scheduler
+from repro.core.scheduler import REC_OP, Scheduler
 from repro.core.simtask import (
     SimBarrier,
     SimChannel,
@@ -78,6 +78,14 @@ _EV_SPIN = 3     # a = task, b = slot_id, c = epoch  (next busy-wait poll)
 _EV_STALL = 4    # a = task, b = slot_id, c = epoch  (non-sched-point stall)
 _EV_TICK = 5     # a = slot_id                        (preemption tick)
 _EV_WAKE = 6     # a = task                           (sleep expiry)
+_EV_SUBMIT = 7   # a = task                           (deferred arrival)
+
+#: body ops the recording advance loop captures verbatim (numeric payloads
+#: only — sync ops are reconstructed from the BLOCK/WAKE decision records
+#: instead, see trace/replayer.py)
+_REC_OPKINDS = frozenset(
+    ("compute", "stall", "sleep", "sleep_until", "yield", "checkpoint")
+)
 
 
 class SimExecutor:
@@ -134,6 +142,10 @@ class SimExecutor:
         self.sched.on_urgent = self._urgent_kick
         #: cache residency: which task's working set last warmed each slot
         self._slot_last: dict[int, int] = {}
+        #: intrinsic-op recorder (trace.recorder) — None when disarmed;
+        #: arming swaps _advance for its recording twin (see
+        #: _set_op_recorder), so plain runs pay nothing, not even a check
+        self._oprec = None
 
     # ------------------------------------------------------------------ #
     # public API
@@ -153,8 +165,21 @@ class SimExecutor:
         if at <= self._now:
             self._submit(task)
         else:
-            self._post(at, lambda: self._submit(task))
+            self._post_ev(at, _EV_SUBMIT, task)
         return task
+
+    def feed(self, arrivals) -> None:
+        """Stream task arrivals into the run: ``arrivals`` yields
+        ``(time, task)`` pairs sorted by time. Exactly one arrival event
+        is in the heap at any moment — the drain loop pulls the next pair
+        when it fires — so replaying a million-task trace does not flood
+        the heap (and every pop stays shallow). Tasks must be fresh
+        (CREATED) ``Task`` objects; times must be non-decreasing and not
+        in the past."""
+        it = iter(arrivals)
+        for at, task in it:
+            self._post_ev(at, _EV_SUBMIT, task, it)
+            break
 
     def attach(self, job: Job, *, policy: Optional[Policy] = None,
                share: Optional[float] = None):
@@ -203,13 +228,17 @@ class SimExecutor:
         # bind hot attributes to locals: this loop is the whole sim
         heap = self._heap
         heappop = heapq.heappop
+        heappush = heapq.heappush
         resume = self._resume
         advance = self._advance
-        valid = self._valid
+        submit = self._submit
         sched = self.sched
         unblock_batch = sched.unblock_batch
         max_events = self.max_events
+        RUNNING = TaskState.RUNNING
+        oprec = self._oprec
         n = 0
+        uf = 0.0
         try:
             while heap:
                 entry = heap[0]
@@ -225,34 +254,85 @@ class SimExecutor:
                 if kind == _EV_RESUME:
                     resume(entry[3], entry[4], entry[5])
                 elif kind == _EV_COMPUTE:
+                    # replay fast path: _valid inlined, pending flops read
+                    # from the op tuple itself (no per-event allocation),
+                    # and a compute->compute chain handled entirely in this
+                    # frame — next(body) feeds the next segment without a
+                    # generator-frame round-trip through _advance. Bodies
+                    # may be plain iterators (the replayer uses C-level
+                    # tuple iterators); anything that is not a bare
+                    # compute chain falls back to the generic paths.
                     task = entry[3]
                     slot_id = entry[4]
-                    if valid(task, slot_id, entry[5]):
-                        self._useful_flops += task._pending[2]
-                        task._pending = None
-                        advance(task, slot_id)
+                    if (task._epoch == entry[5]
+                            and task.state is RUNNING
+                            and task.slot == slot_id):
+                        uf += task._pending[2]
+                        if oprec is None and task._send is None:
+                            try:
+                                op = next(task._gen)
+                            except StopIteration:
+                                task._pending = None
+                                task._epoch = entry[5] + 1
+                                sched.finish(task)
+                            else:
+                                if op[0] == "compute":
+                                    task._pending = op
+                                    task._pending_started = t
+                                    seq = self._seq
+                                    self._seq = seq + 1
+                                    heappush(heap, (t + op[1], seq,
+                                                    _EV_COMPUTE, task,
+                                                    slot_id, entry[5]))
+                                else:
+                                    task._pending = None
+                                    if self._handle(task, slot_id, op):
+                                        advance(task, slot_id)
+                        else:
+                            task._pending = None
+                            advance(task, slot_id)
                 elif kind == _EV_WAKE:
                     # batch same-timestamp sleep expiries: one lock
-                    # round-trip, identical per-task make-ready/fill order
+                    # round-trip, identical per-task make-ready/fill order.
+                    # Counting is structural — the extras drained here plus
+                    # the shared increment below make events_processed equal
+                    # exactly the number of heap pops, so recorder event
+                    # counts and the events/s gate agree with the decision
+                    # stream even when wakeups coalesce.
                     task = entry[3]
                     if heap and heap[0][0] == t and heap[0][2] == _EV_WAKE:
                         batch = [task]
                         while heap and heap[0][0] == t and heap[0][2] == _EV_WAKE:
                             batch.append(heappop(heap)[3])
-                            n += 1
+                        n += len(batch) - 1
                         unblock_batch(batch)
                     else:
                         sched.unblock(task)
+                elif kind == _EV_SUBMIT:
+                    # b (entry[4]) may carry an arrival stream: an iterator
+                    # of (time, task) pairs, pre-sorted by time. The drain
+                    # loop pulls one arrival per submit event, so a
+                    # million-task replay keeps the heap shallow (no
+                    # pre-posted arrival flood) with no feeder closures.
+                    submit(entry[3])
+                    stream = entry[4]
+                    if stream is not None:
+                        for at, nxt in stream:
+                            seq = self._seq
+                            self._seq = seq + 1
+                            heappush(heap, (at, seq, _EV_SUBMIT, nxt,
+                                            stream, None))
+                            break
                 elif kind == _EV_SPIN:
                     task = entry[3]
                     slot_id = entry[4]
-                    if valid(task, slot_id, entry[5]):
+                    if self._valid(task, slot_id, entry[5]):
                         pend = task._pending
                         self._spin_check(task, slot_id, pend[1], pend[2],
                                          pend[3])
                 elif kind == _EV_STALL:
                     task = entry[3]
-                    if valid(task, entry[4], entry[5]):
+                    if self._valid(task, entry[4], entry[5]):
                         advance(task, entry[4])
                 elif kind == _EV_TICK:
                     self._tick(entry[3])
@@ -265,6 +345,7 @@ class SimExecutor:
                     )
         finally:
             self.events_processed += n
+            self._useful_flops += uf
         if until is None and not self._heap:
             undone = [t for t in self.sched.all_tasks if not t.done]
             if undone:
@@ -346,24 +427,90 @@ class SimExecutor:
     def _advance(self, task: Task, slot_id: int) -> None:
         """Pull ops from the task generator until it blocks/computes/ends."""
         gen = task._gen  # type: ignore[attr-defined]
+        heappush = heapq.heappush
+        heap = self._heap
         while True:
             try:
                 send = task._send  # type: ignore[attr-defined]
-                task._send = None  # type: ignore[attr-defined]
-                op = gen.send(send)
+                if send is None:
+                    op = next(gen)  # any iterator works (replay bodies
+                    # are C-level tuple iterators — no generator frame)
+                else:
+                    task._send = None  # type: ignore[attr-defined]
+                    op = gen.send(send)
             except StopIteration:
                 self._bump(task)
                 self.sched.finish(task)
                 return
+            if op[0] == "compute":
+                # hottest op, inlined (it is also first in _handle — this
+                # just skips the extra call): keep the body's own
+                # ("compute", dt, flops) tuple as the pending state, no
+                # per-segment allocation.
+                task._pending = op
+                now = self._now
+                task._pending_started = now
+                seq = self._seq
+                self._seq = seq + 1
+                heappush(heap, (now + op[1], seq, _EV_COMPUTE, task,
+                                slot_id, task._epoch))
+                return
             if not self._handle(task, slot_id, op):
                 return  # task no longer advancing synchronously
+
+    def _set_op_recorder(self, rec) -> None:
+        """Arm (or, with ``None``, disarm) intrinsic-op recording. Arming
+        shadows ``_advance`` with its recording twin via an instance
+        attribute — the disarmed engine keeps the original method and pays
+        zero per-op cost. Must be called before ``run`` (the drain loop
+        binds ``_advance`` to a local at entry)."""
+        self._oprec = rec
+        if rec is None:
+            self.__dict__.pop("_advance", None)
+        else:
+            self._advance = self._advance_recording
+
+    def _advance_recording(self, task: Task, slot_id: int) -> None:
+        """Recording twin of ``_advance``: emits a REC_OP record for every
+        intrinsic (numeric-payload) op the body yields. Sync ops carry live
+        object references and are deliberately not recorded — the replayer
+        reconstructs each blocking occurrence from the BLOCK/WAKE decision
+        records as an absolute-time ``sleep_until``."""
+        gen = task._gen  # type: ignore[attr-defined]
+        rec = self._oprec
+        while True:
+            try:
+                send = task._send  # type: ignore[attr-defined]
+                if send is None:
+                    op = next(gen)
+                else:
+                    task._send = None  # type: ignore[attr-defined]
+                    op = gen.send(send)
+            except StopIteration:
+                self._bump(task)
+                self.sched.finish(task)
+                return
+            if op[0] in _REC_OPKINDS:
+                rec((self._now, REC_OP, task.tid, op))
+            if not self._handle(task, slot_id, op):
+                return
 
     def _handle(self, task: Task, slot_id: int, op: tuple) -> bool:
         """Returns True if the generator should keep advancing right now."""
         kind = op[0]
 
         if kind == "compute":
-            self._start_compute(task, slot_id, op[1], op[2])
+            # hottest op: keep the body's own ("compute", dt, flops) tuple
+            # as the pending state (no per-segment allocation) and push the
+            # completion event inline. _start_compute remains for the
+            # post-preempt resume path, which must rebuild remaining time.
+            task._pending = op
+            now = self._now
+            task._pending_started = now
+            seq = self._seq
+            self._seq = seq + 1
+            heapq.heappush(self._heap, (now + op[1], seq, _EV_COMPUTE, task,
+                                        slot_id, task._epoch))
             return False
 
         if kind == "yield":  # hot under §5.2-adapted workloads: check early
@@ -492,6 +639,17 @@ class SimExecutor:
             dt = op[1]
             self._block(task)
             self._post_ev(self._now + dt, _EV_WAKE, task)
+            return False
+
+        if kind == "sleep_until":
+            # absolute-time sleep: the replay encoding of a recorded sync
+            # block (trace/replayer.py pairs each BLOCK with its WAKE time).
+            # A replayed wake never precedes its block under the recorded
+            # policy; the clamp only guards hand-written traces.
+            t = op[1]
+            now = self._now
+            self._block(task)
+            self._post_ev(t if t > now else now, _EV_WAKE, task)
             return False
 
         if kind == "spawn":

@@ -45,6 +45,38 @@ class SchedulerError(RuntimeError):
     pass
 
 
+# --------------------------------------------------------------------- #
+# trace decision-record codes (repro.trace builds on these; they live
+# here so core never imports the trace package). An armed recorder is
+# called as ``rec((t, code, a, b))`` — ONE pre-built record tuple, so the
+# recorder can be a bare C-level ``deque.append`` with no Python frame.
+# --------------------------------------------------------------------- #
+(REC_OP, REC_SPAWN, REC_DISPATCH, REC_BLOCK, REC_YIELD, REC_DONE,
+ REC_PREEMPT, REC_WAKE, REC_JOB, REC_ATTACH, REC_DEMOTE, REC_DETACH,
+ REC_TARGET, REC_RESIZE, REC_DL_POST, REC_DL_RETIRE, REC_URGENT,
+ REC_REQUEST, REC_REQ_DONE) = range(19)
+
+#: StopReason -> decision code for the one shared stop site
+_REC_STOP = {
+    StopReason.BLOCK: REC_BLOCK,
+    StopReason.YIELD: REC_YIELD,
+    StopReason.DONE: REC_DONE,
+    StopReason.PREEMPT: REC_PREEMPT,
+}
+
+
+def _pol_desc(policy: Optional[Policy]):
+    """Serializable (name, param) description of an intra-job policy —
+    enough for the replayer to rebuild an equivalent instance."""
+    if policy is None:
+        return None
+    for attr in ("slice_s", "quantum", "default_quantum"):
+        v = getattr(policy, attr, None)
+        if v is not None:
+            return (policy.name, v)
+    return (policy.name, None)
+
+
 class _SlotState:
     __slots__ = ("running", "run_started", "idle_since", "need_resched",
                  "slice_expiry", "successor")
@@ -134,6 +166,11 @@ class Scheduler:
         #: binds this to the watchdog's condition-variable kick so the
         #: request is serviced immediately instead of at the next tick.
         self.on_urgent: Optional[Callable[[int], None]] = None
+        #: decision-record hook (repro.trace): ``None`` when disarmed — the
+        #: hot paths pay exactly one predicate check; armed, it is called
+        #: as ``rec((t, code, a, b))`` under the scheduler lock, so records
+        #: are totally ordered exactly like the decisions themselves.
+        self._rec = None
         #: job-level slot arbiter: every scheduling point routes through it
         self.arbiter = arbiter if arbiter is not None else SlotArbiter(policy)
         self.arbiter.attach(self)
@@ -145,6 +182,10 @@ class Scheduler:
         with self._lock:
             self.jobs[job.jid] = job
             self.arbiter.on_job(job)
+            rec = self._rec
+            if rec is not None:
+                rec((self.clock(), REC_JOB, job.jid,
+                     (job.name, job.nice, job.share)))
         return job
 
     def attach_job(self, job: Job, *, policy: Optional[Policy] = None,
@@ -154,6 +195,10 @@ class Scheduler:
         with self._lock:
             lease = self.arbiter.attach_job(job, policy=policy, share=share)
             self.jobs[job.jid] = job
+            rec = self._rec
+            if rec is not None:
+                rec((self.clock(), REC_ATTACH, job.jid,
+                     (share, _pol_desc(policy))))
             self._fill_idle_slots(self.clock())
             return lease
 
@@ -166,6 +211,9 @@ class Scheduler:
         matrix; ``detach_job`` remains the teardown path)."""
         with self._lock:
             lease = self.arbiter.demote_job(job, share=share)
+            rec = self._rec
+            if rec is not None:
+                rec((self.clock(), REC_DEMOTE, job.jid, share))
             self._fill_idle_slots(self.clock())
             return lease
 
@@ -176,6 +224,9 @@ class Scheduler:
         with self._lock:
             self.arbiter.detach_job(job)
             self.jobs.pop(job.jid, None)
+            rec = self._rec
+            if rec is not None:
+                rec((self.clock(), REC_DETACH, job.jid, None))
             self._fill_idle_slots(self.clock())
 
     def policy_of(self, job: Job) -> Policy:
@@ -240,6 +291,9 @@ class Scheduler:
                         if st.running is not None and not st.need_resched:
                             st.need_resched = True
                             surplus -= 1
+            rec = self._rec
+            if rec is not None:
+                rec((now, REC_TARGET, target, None))
             self.arbiter.set_capacity(target)
             self._fill_idle_slots(now)
             return target
@@ -264,6 +318,10 @@ class Scheduler:
             if task.state is TaskState.CREATED:
                 self.all_tasks.append(task)
                 task.stats.created_at = now
+                rec = self._rec
+                if rec is not None:
+                    rec((now, REC_SPAWN, task.tid,
+                         (task.job.jid, task.deadline, task.cost_hint)))
             self._make_ready(task, now)
             self._fill_idle_slots(now)
 
@@ -273,11 +331,14 @@ class Scheduler:
         The event engine uses this to coalesce same-timestamp wakeups."""
         with self._lock:
             now = self.clock()
+            rec = self._rec
             for task in tasks:
                 if task.state is not TaskState.BLOCKED:
                     task._pending_wakeups += 1
                     continue
                 task.stats.blocked_time += now - task._blocked_at  # type: ignore[attr-defined]
+                if rec is not None:
+                    rec((now, REC_WAKE, task.tid, None))
                 self._make_ready(task, now)
                 self._fill_idle_slots(now)
 
@@ -307,6 +368,9 @@ class Scheduler:
                 return
             now = self.clock()
             task.stats.blocked_time += now - task._blocked_at  # type: ignore[attr-defined]
+            rec = self._rec
+            if rec is not None:
+                rec((now, REC_WAKE, task.tid, None))
             self._make_ready(task, now)
             self._fill_idle_slots(now)
 
@@ -490,6 +554,10 @@ class Scheduler:
             st.need_resched = True
             if successor is not None:
                 st.successor = successor
+            rec = self._rec
+            if rec is not None:
+                rec((self.clock(), REC_URGENT, slot_id,
+                     None if successor is None else successor.tid))
             if self.on_urgent is not None:
                 self.on_urgent(slot_id)
             return True
@@ -513,6 +581,9 @@ class Scheduler:
         elapsed = now - st.run_started
         task.stats.run_time += elapsed
         task.job.service_time += elapsed
+        rec = self._rec
+        if rec is not None:
+            rec((now, _REC_STOP[reason], task.tid, slot))
         self.arbiter.on_stop(task, slot, now, elapsed, reason)
         st.running = None
         st.need_resched = False  # any scheduling point satisfies the request
@@ -581,6 +652,9 @@ class Scheduler:
         task._slot_state = st  # checkpoint fast path: one attribute hop
         self._idle.discard(slot_id)
         self._ctx_switch_time += self.ctx_switch_cost
+        rec = self._rec
+        if rec is not None:
+            rec((now, REC_DISPATCH, task.tid, slot_id))
         self.arbiter.on_run(task, slot_id, now)
         self._dispatch_cb(task, slot_id)
         return task

@@ -73,6 +73,13 @@ def sleep(seconds: float) -> tuple:
     return ("sleep", float(seconds))
 
 
+def sleep_until(t: float) -> tuple:
+    """Absolute-time block: wake at virtual time ``t`` (clamped to now).
+    The trace replayer encodes recorded sync blocks with this, replaying
+    each wake at its recorded timestamp."""
+    return ("sleep_until", float(t))
+
+
 def yield_() -> tuple:
     return ("yield",)
 

@@ -584,6 +584,14 @@ class UsfRuntime:
         binds it) and works equally for in-process width caps."""
         return self.sched.set_slot_target(n)
 
+    def set_recorder(self, rec) -> None:
+        """Arm (or, with ``None``, disarm) a trace decision recorder on the
+        live runtime: ``rec((t, code, a, b))`` is invoked under the scheduler
+        lock at every decision point (``repro.trace.TraceRecorder.emit`` is
+        the usual target — see ``TraceRecorder.attach_runtime``). Disarmed,
+        every decision path pays a single predicate check."""
+        self.sched._rec = rec
+
     # ------------------------------------------------------------------ #
     # nOS-V-like blocking API (used by repro.core.sync)
     # ------------------------------------------------------------------ #

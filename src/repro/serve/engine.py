@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policies import Policy, SchedCoop
+from repro.core.scheduler import REC_REQ_DONE, REC_REQUEST
 from repro.core.sync import CoopChannel, CoopEvent
 from repro.core.task import Job
 from repro.core.threads import UsfRuntime, UsfTaskError
@@ -108,10 +109,17 @@ class InferenceServer:
             post = getattr(self.usf.sched.arbiter, "post_deadline", None)
             if post is not None:
                 req._dl_token = post(self.job, req.deadline)
+        rec = self.usf.sched._rec
+        if rec is not None:
+            rec((self.usf.sched.clock(), REC_REQUEST, req.rid,
+                 (self.job.jid, req.deadline)))
         self.queue.put(req)
         return req
 
     def _retire(self, req: Request) -> None:
+        rec = self.usf.sched._rec
+        if rec is not None:
+            rec((self.usf.sched.clock(), REC_REQ_DONE, req.rid, req.latency))
         if req._dl_token is not None:
             retire = getattr(self.usf.sched.arbiter, "retire_deadline", None)
             if retire is not None:
