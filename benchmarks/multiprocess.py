@@ -24,10 +24,24 @@ Scenarios:
   process finishes, the broker reclaims its lease and regrants the node
   to the survivor mid-run — work conservation a static partition cannot
   express.
+* ``demand_feedback``: the idle/saturated phase shift. Two processes
+  alternate busy bursts in antiphase (a baton of events serializes the
+  turns); both stay alive and registered throughout. Bursts are
+  *latency-bound*: each phase is a small matmul plus a blocking wait
+  (the IO/RPC serving shape — the wait pins its slot, so granted width
+  IS the achievable in-flight concurrency, independent of host core
+  count). With static wants (``report_backlog=False`` — the
+  pre-demand-feedback broker) each burst runs at half the node while
+  the idle sibling pins its grant; with live backlog feedback the idle
+  worker's effective want decays to zero within a few damped heartbeats
+  and the saturated worker bursts at (nearly) full node width. Target:
+  demand-aware beats static-want **≥ 1.3x** on makespan (asserted in
+  full runs; smoke proves the machinery, including that demand-driven
+  regrants actually fired).
 
 Run:  PYTHONPATH=src python -m benchmarks.multiprocess [--smoke]
 Writes BENCH_multiprocess.json (smoke: BENCH_multiprocess.smoke.json via
-``make check``; the ratio is asserted only in full mode — CI smoke just
+``make check``; the ratios are asserted only in full mode — CI smoke just
 proves the machinery end-to-end).
 """
 
@@ -158,6 +172,121 @@ def _run_colocation(mode: str, *, phases_per_proc, n: int,
     }
 
 
+def _phase_worker(broker_path, slots: int, threads: int, phases: int,
+                  n: int, wait_s: float, batons, parity: int, go, result_q,
+                  name: str, report_backlog: bool, hb: float) -> None:
+    """One phase-shift worker: takes every other baton, bursts ``threads``
+    latency-bound tasks (matmul + a blocking ``wait_s`` per phase — the
+    blocking wait holds its slot, so burst time scales with
+    ``threads / granted_width``). Between its turns the main thread
+    blocks on a plain mp Event — the runtime is truly idle, so a
+    demand-reporting heartbeat sees backlog 0 and the broker can drain
+    this worker's lease to the busy sibling. ``report_backlog=False``
+    replays the static-want (v1) broker contract as the A/B baseline."""
+    for var in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS",
+                "MKL_NUM_THREADS"):
+        os.environ.setdefault(var, "1")
+    import numpy as np
+
+    from repro.core.policies import SchedCoop
+    from repro.core.sync import CoopBarrier
+    from repro.core.task import Job
+    from repro.core.threads import UsfRuntime
+    from repro.core.topology import Topology
+    from repro.ipc import BrokerClient
+
+    rt = UsfRuntime(Topology(slots, 1), SchedCoop())
+    client = BrokerClient(broker_path, name=name, share=1.0,
+                          heartbeat_interval=hb,
+                          report_backlog=report_backlog).bind(rt).start()
+    client.wait_grant(5.0)
+    job = Job(name)
+    a = np.random.default_rng(0).standard_normal((n, n), dtype=np.float64)
+    go.wait()
+    t0 = time.monotonic()
+    for k in range(parity, len(batons) - 1, 2):
+        batons[k].wait()                    # idle until it is our turn
+        bar = CoopBarrier(rt, threads)
+
+        def body():
+            x = a.copy()
+            for _ in range(phases):
+                x = x @ a
+                x *= 1.0 / np.abs(x).max()
+                time.sleep(wait_s)          # blocking wait: pins the slot
+                bar.wait()
+
+        tasks = [rt.create(body, job=job) for _ in range(threads)]
+        for t in tasks:
+            if not rt.join(t, timeout=600.0):
+                result_q.put({"name": name, "error": "join timeout"})
+                return
+        batons[k + 1].set()                 # sibling's turn
+    makespan = time.monotonic() - t0
+    result_q.put({"name": name, "makespan": makespan,
+                  "final_grant": client.granted})
+    client.stop()
+    rt.shutdown(timeout=5.0)
+
+
+def _run_phase_shift(*, report_backlog: bool, bursts_per_proc: int,
+                     phases: int, n: int, wait_s: float) -> dict:
+    """Antiphase busy/idle workers under one broker. The baton chain
+    serializes the bursts, so the whole run is a sequence of
+    (one saturated, one idle) intervals — the exact shape where live
+    demand pays and static wants strand half the node."""
+    slots = _node_slots()
+    from repro.ipc import NodeBroker
+
+    # fast demand knobs: the benchmark measures steady-burst throughput,
+    # not damping latency, so keep the regrant reaction well under a
+    # burst length (the same knobs are used for the static baseline,
+    # where they are inert)
+    broker = NodeBroker(capacity=slots, heartbeat_timeout=2.0,
+                        demand_beats=2, min_regrant_interval=0.02)
+    path = broker.start()
+    n_bursts = bursts_per_proc * N_PROCS
+    batons = [_CTX.Event() for _ in range(n_bursts + 1)]
+    go = _CTX.Event()
+    result_q = _CTX.Queue()
+    procs = []
+    for i in range(N_PROCS):
+        p = _CTX.Process(
+            target=_phase_worker,
+            args=(path, slots, slots, phases, n, wait_s, batons, i, go,
+                  result_q, f"proc{i}", report_backlog, 0.02),
+            daemon=True)
+        p.start()
+        procs.append(p)
+    try:
+        time.sleep(1.0)  # runtimes and registrations come up
+        go.set()
+        batons[0].set()
+        results = [result_q.get(timeout=600.0) for _ in procs]
+        counters = {k: v for k, v in broker.snapshot().items()
+                    if k in ("regrants", "demand_regrants", "grants_pushed",
+                             "grants_suppressed")}
+    finally:
+        for p in procs:
+            p.join(30.0)
+            if p.is_alive():
+                p.terminate()
+        broker.stop()
+    errs = [r for r in results if "error" in r]
+    if errs:
+        raise RuntimeError(f"worker failure: {errs}")
+    by_name = {r["name"]: r for r in results}
+    return {
+        "mode": "demand" if report_backlog else "static_want",
+        "node_slots": slots,
+        "bursts_per_proc": bursts_per_proc,
+        "per_proc_makespan": {k: round(v["makespan"], 4)
+                              for k, v in sorted(by_name.items())},
+        "makespan": round(max(r["makespan"] for r in results), 4),
+        "broker_counters": counters,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--out", default=None,
@@ -204,6 +333,41 @@ def main(argv=None) -> int:
           f"{elastic['per_proc_makespan']}")
     print(f"  work-conservation gain: {handoff:.2f}x")
 
+    # -- scenario 3: idle/saturated phase shift — live demand vs static -- #
+    # each burst must dwarf the demand-damping latency (a few heartbeats
+    # + min-regrant interval, ~0.1s with the bench knobs) or the regrant
+    # reaction time eats the concurrency gain — hence the coarse full-run
+    # burst (~1s at the static half-node width)
+    bursts = 1 if args.smoke else 2
+    ps_phases = 10 if args.smoke else 60
+    ps_wait = 0.005 if args.smoke else 0.008
+    static_ps = _run_phase_shift(report_backlog=False,
+                                 bursts_per_proc=bursts,
+                                 phases=ps_phases, n=n, wait_s=ps_wait)
+    demand_ps = _run_phase_shift(report_backlog=True,
+                                 bursts_per_proc=bursts,
+                                 phases=ps_phases, n=n, wait_s=ps_wait)
+    feedback = static_ps["makespan"] / demand_ps["makespan"]
+    print(f"demand_feedback (antiphase bursts, {bursts} per proc, "
+          f"{ps_phases} phases):")
+    print(f"  static wants (idle sibling pins half): "
+          f"{static_ps['makespan']:.3f}s  {static_ps['per_proc_makespan']}")
+    print(f"  live backlog feedback:                 "
+          f"{demand_ps['makespan']:.3f}s  {demand_ps['per_proc_makespan']}  "
+          f"counters={demand_ps['broker_counters']}")
+    print(f"  demand-feedback gain: {feedback:.2f}x (target >= 1.3x)")
+    # machinery check, valid even in smoke: the demand run must have
+    # actually moved leases on backlog feedback, and the static run must
+    # not have (its clients beat without the field)
+    if demand_ps["broker_counters"]["demand_regrants"] < 1:
+        print("FAIL: demand run triggered no demand-driven regrants",
+              file=sys.stderr)
+        return 1
+    if static_ps["broker_counters"]["demand_regrants"] != 0:
+        print("FAIL: static-want run saw demand-driven regrants",
+              file=sys.stderr)
+        return 1
+
     payload = {
         "bench": "multiprocess",
         "smoke": args.smoke,
@@ -224,11 +388,22 @@ def main(argv=None) -> int:
                 "elastic": elastic,
                 "gain": round(handoff, 3),
             },
+            "demand_feedback": {
+                "static": static_ps,
+                "demand": demand_ps,
+                "gain": round(feedback, 3),
+                "target": 1.3,
+                "meets_target": feedback >= 1.3,
+            },
         },
     }
     write_artifact(default_out("multiprocess", args.smoke, args.out), payload)
     if not args.smoke and speedup < 1.5:
         print(f"FAIL: broker-coordinated speedup {speedup:.2f}x < 1.5x",
+              file=sys.stderr)
+        return 1
+    if not args.smoke and feedback < 1.3:
+        print(f"FAIL: demand-feedback gain {feedback:.2f}x < 1.3x",
               file=sys.stderr)
         return 1
     return 0

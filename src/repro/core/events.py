@@ -222,6 +222,11 @@ class SimExecutor:
         runtime — the deterministic twin for testing node-level revokes."""
         return self.sched.set_slot_target(n)
 
+    def runnable_backlog(self) -> int:
+        """Instantaneous READY + RUNNING count (``Scheduler.runnable_backlog``)
+        — the live-demand probe a ``BrokerClient`` heartbeat reports."""
+        return self.sched.runnable_backlog()
+
     def run(self, *, until: Optional[float] = None) -> SchedStats:
         """Drain all events (or run until virtual time ``until``)."""
         limit = until if until is not None else self.max_time

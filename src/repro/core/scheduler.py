@@ -301,6 +301,18 @@ class Scheduler:
     def slot_target(self) -> int:
         return self._slot_target
 
+    def runnable_backlog(self) -> int:
+        """Instantaneous runnable backlog: READY + RUNNING task count.
+
+        Lock-free by design — this is the demand probe a ``BrokerClient``
+        heartbeat samples from its beat thread (``repro.ipc``), so it must
+        never contend with the dispatch hot path. The reads race benignly:
+        ``ready_count`` sums per-policy counters and the running count is
+        derived from set sizes; a transiently stale sample is smoothed out
+        by the broker's demand damping anyway."""
+        running = len(self._slots) - len(self._idle) - len(self._parked)
+        return max(0, self.arbiter.ready_count() + running)
+
     def parked_slot_ids(self) -> list[int]:
         with self._lock:
             return sorted(self._parked)

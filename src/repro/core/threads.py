@@ -584,6 +584,13 @@ class UsfRuntime:
         binds it) and works equally for in-process width caps."""
         return self.sched.set_slot_target(n)
 
+    def runnable_backlog(self) -> int:
+        """Instantaneous READY + RUNNING count (``Scheduler.runnable_backlog``,
+        a lock-free probe): the live demand a bound ``BrokerClient``
+        piggybacks on its heartbeats so the node broker can tell an idle
+        process from a saturated one."""
+        return self.sched.runnable_backlog()
+
     def set_recorder(self, rec) -> None:
         """Arm (or, with ``None``, disarm) a trace decision recorder on the
         live runtime: ``rec((t, code, a, b))`` is invoked under the scheduler

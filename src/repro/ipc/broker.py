@@ -7,9 +7,23 @@ across jobs — literally with the same machinery (``repro.core.lease``):
 * every registered worker process holds a node lease: a share weight
   apportioned into an integer ``quota`` by largest remainder;
 * grants are **work-conserving**: capacity a worker cannot use (its
-  demand — its own topology width — is below its quota) is redistributed
-  to wanting workers in the I5 borrow order (least-over-quota first), so
-  no node slot idles while a sibling process has demand;
+  demand is below its quota) is redistributed to wanting workers in the
+  I5 borrow order (least-over-quota first), so no node slot idles while
+  a sibling process has demand;
+* demand is **live** (envelope v2): each heartbeat piggybacks the
+  worker's instantaneous runnable backlog, and apportionment runs over
+  ``effective want = clamp(backlog, 0, registered width)`` instead of
+  the static registration width — an idle worker's slots flow to a
+  saturated sibling while the idle process is still alive and
+  registered. Demand swings are **hysteresis-damped** per worker
+  (``DemandState``: K consecutive beats on the same side of the current
+  effective want, an EWMA smoother, and a minimum re-grant interval), so
+  a bursty backlog cannot flap grants across the node. A zero backlog is
+  a legal demand (``want=0`` likewise at registration): the broker can
+  grant a worker nothing — the liveness floor lives at grant
+  *application* (``BrokerClient`` floors ``set_slot_target`` at one
+  slot), not in the demand model. Workers that never report backlog (v1
+  clients) keep the static contract: effective want == registered width;
 * leases are **elastic**: ``resize``/``rescale`` ops re-apportion at
   runtime (the cross-process twin of ``SlotLease.resize``, and the
   landing point of ``MeshRescaleEvent`` routing);
@@ -65,20 +79,114 @@ class BrokerError(RuntimeError):
     pass
 
 
+class DemandState:
+    """Hysteresis-damped live-demand tracker for one worker.
+
+    Pure and deterministic — no wall-clock reads, no randomness: the
+    caller supplies ``now`` with every observation, so the same beat
+    sequence always yields the same decision sequence (pinned by the
+    seeded determinism tests in tests/test_chaos.py).
+
+    ``observe(backlog, now)`` folds one heartbeat's backlog sample into
+    the model and returns the new effective want when the damping admits
+    a move, else ``None``. The damping has three gates, all of which must
+    open:
+
+    * **side hysteresis** — the clamped sample must land on the same side
+      of the current effective want for ``beats`` consecutive
+      observations (a sample *at* the effective want resets the streak:
+      the grant already matches demand);
+    * **EWMA smoothing** — the admitted target is the smoothed backlog
+      (``alpha``-weighted), clamped into [0, width] and nudged at least
+      one step in the confirmed direction so a laggy average cannot veto
+      a confirmed move;
+    * **min-regrant interval** — at most one move per ``min_interval``
+      seconds, so even a persistent sawtooth regrants boundedly.
+
+    ``width`` is the registered demand ceiling (the worker's topology
+    width); effective want always stays in [0, width]. Zero is a legal
+    resting state — the model can express "this process wants nothing".
+    """
+
+    __slots__ = ("width", "eff", "ewma", "beats", "alpha", "min_interval",
+                 "_side", "_streak", "_last_change", "last_backlog")
+
+    def __init__(self, width: int, *, beats: int = 3, alpha: float = 0.5,
+                 min_interval: float = 0.25):
+        self.width = max(0, int(width))
+        self.eff = self.width          # static until live feedback arrives
+        self.ewma = float(self.eff)
+        self.beats = max(1, int(beats))
+        self.alpha = float(alpha)
+        self.min_interval = float(min_interval)
+        self._side = 0
+        self._streak = 0
+        self._last_change = float("-inf")
+        #: last raw (clamped) sample, for introspection/snapshots
+        self.last_backlog: Optional[int] = None
+
+    def set_width(self, width: int) -> None:
+        """Re-registration / resize moved the demand ceiling. A worker
+        that has never reported backlog (v1 client) keeps the static
+        contract — effective want tracks the new width; one with live
+        feedback is clamped into the new range."""
+        self.width = max(0, int(width))
+        if self.last_backlog is None:
+            self.eff = self.width
+            self.ewma = float(self.width)
+        else:
+            if self.eff > self.width:
+                self.eff = self.width
+            self.ewma = min(self.ewma, float(self.width))
+
+    def observe(self, backlog: int, now: float) -> Optional[int]:
+        b = min(max(0, int(backlog)), self.width)
+        self.last_backlog = b
+        self.ewma += self.alpha * (b - self.ewma)
+        side = (b > self.eff) - (b < self.eff)
+        if side == 0:
+            self._side = 0
+            self._streak = 0
+            return None
+        self._streak = self._streak + 1 if side == self._side else 1
+        self._side = side
+        if self._streak < self.beats:
+            return None
+        if now - self._last_change < self.min_interval:
+            return None
+        target = min(max(0, int(round(self.ewma))), self.width)
+        # a confirmed move must advance at least one slot even while the
+        # EWMA still straddles the old value
+        target = max(target, self.eff + 1) if side > 0 \
+            else min(target, self.eff - 1)
+        target = min(max(0, target), self.width)
+        self.eff = target
+        self._last_change = now
+        self._side = 0
+        self._streak = 0
+        return target
+
+
 class ProcLease:
     """One registered worker process's claim on the node's slots.
 
     A ``LeaseTable`` entry (``share``/``quota``/``in_use``), plus the
-    broker-side connection state. ``want`` is the worker's demand (its own
-    topology width); ``granted`` is the pushed allotment — ``in_use``
-    mirrors it so the shared I5 borrow order applies unchanged.
+    broker-side connection state. ``want`` is the worker's *registered*
+    demand ceiling (its own topology width; 0 is legal — a pure
+    best-effort process); ``demand`` tracks its *live* effective want
+    from heartbeat backlog feedback (static ``== want`` for v1 clients
+    that never report backlog). ``granted`` is the pushed allotment —
+    ``in_use`` mirrors it so the shared I5 borrow order applies
+    unchanged. ``last_pushed`` remembers the grant content last sent on
+    this connection, so an unchanged regrant is suppressed instead of
+    re-pushed.
     """
 
     __slots__ = ("wid", "name", "pid", "share", "quota", "in_use", "want",
-                 "granted", "last_beat", "conn")
+                 "granted", "last_beat", "conn", "demand", "last_pushed")
 
     def __init__(self, wid: int, name: str, pid: int, share: float,
-                 want: int, conn: socket.socket):
+                 want: int, conn: socket.socket, demand: DemandState):
         self.wid = wid
         self.name = name
         self.pid = pid
@@ -89,10 +197,20 @@ class ProcLease:
         self.granted = 0
         self.last_beat = time.monotonic()
         self.conn = conn
+        self.demand = demand
+        #: (granted, quota) of the last successful push on this conn
+        self.last_pushed: Optional[tuple] = None
+
+    @property
+    def eff_want(self) -> int:
+        """The demand the apportionment sees: hysteresis-damped live
+        backlog, clamped into [0, registered width]."""
+        return self.demand.eff
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (f"ProcLease({self.name}#{self.wid} pid={self.pid} "
-                f"share={self.share:.1f} {self.granted}/{self.quota})")
+                f"share={self.share:.1f} {self.granted}/{self.quota} "
+                f"want={self.eff_want}/{self.want})")
 
 
 class NodeBroker:
@@ -105,17 +223,31 @@ class NodeBroker:
     heartbeat_timeout:  seconds of silence before a worker is declared dead
                         and its lease reclaimed (socket EOF reclaims
                         immediately; this catches wedged-but-open workers).
+    demand_beats:       hysteresis depth K — a worker's effective want
+                        moves only after K consecutive heartbeats whose
+                        backlog lands on the same side of it (flap
+                        damping; see ``DemandState``).
+    demand_alpha:       EWMA weight for the backlog smoother (1.0 = raw
+                        samples, smaller = smoother).
+    min_regrant_interval: per-worker floor (seconds) between demand-driven
+                        effective-want moves — even a persistent backlog
+                        sawtooth regrants boundedly.
     """
 
     def __init__(self, path: Optional[str] = None, *,
                  capacity: Optional[int] = None,
-                 heartbeat_timeout: float = 1.0):
+                 heartbeat_timeout: float = 1.0,
+                 demand_beats: int = 3, demand_alpha: float = 0.5,
+                 min_regrant_interval: float = 0.25):
         self.path = path or default_socket_path()
         self.capacity = int(capacity if capacity is not None
                             else (os.cpu_count() or 1))
         if self.capacity <= 0:
             raise BrokerError(f"capacity must be positive, got {self.capacity}")
         self.heartbeat_timeout = float(heartbeat_timeout)
+        self.demand_beats = int(demand_beats)
+        self.demand_alpha = float(demand_alpha)
+        self.min_regrant_interval = float(min_regrant_interval)
         #: per-start incarnation id: the fencing token carried on every
         #: grant — a restarted broker can never be mistaken for its
         #: predecessor by a reconnecting client
@@ -134,6 +266,15 @@ class NodeBroker:
         #: lifetime counters (introspection / tests)
         self.registrations = 0
         self.reclaims = 0
+        #: regrant passes run (any trigger: membership, share, demand)
+        self.regrants = 0
+        #: regrant passes triggered by a damped demand swing specifically
+        self.demand_regrants = 0
+        #: grant messages actually pushed by regrant passes
+        self.grants_pushed = 0
+        #: per-worker sends a regrant pass skipped because the grant
+        #: content was unchanged (the dedupe the flap-damping test pins)
+        self.grants_suppressed = 0
 
     # ------------------------------------------------------------------ #
     # lifecycle
@@ -288,20 +429,28 @@ class NodeBroker:
                 return
             with self._lock:
                 if lease is None:
+                    # want=0 is legal (a pure best-effort registration):
+                    # the liveness floor belongs at grant application
+                    # (the client floors set_slot_target at 1), never in
+                    # the demand model — flooring here would pin a node
+                    # slot on every idle process forever
+                    want = max(0, int(msg.get("slots", 1)))
                     lease = ProcLease(
                         next(_WID),
                         str(msg.get("name", "worker")),
                         int(msg.get("pid", 0)),
                         max(0.0, float(msg.get("share", 1.0))),
-                        max(1, int(msg.get("slots", 1))),
+                        want,
                         conn,
+                        self._make_demand(want),
                     )
                     cell[0] = lease
                     self._table.add(lease.wid, lease)
                     self.registrations += 1
                 else:  # re-register: update the existing lease in place
                     lease.share = max(0.0, float(msg.get("share", lease.share)))
-                    lease.want = max(1, int(msg.get("slots", lease.want)))
+                    lease.want = max(0, int(msg.get("slots", lease.want)))
+                    lease.demand.set_width(lease.want)
                 self._regrant()
         elif op == "heartbeat":
             if lease is None:
@@ -311,6 +460,23 @@ class NodeBroker:
                 # re-registers it (self-healing, never a silent limbo).
                 self._drop(conn, cell, reclaim=False)
             else:
+                # envelope v2: the beat may piggyback the sender's live
+                # runnable backlog. Absent = a v1 client (static demand,
+                # fully supported); present-but-malformed = a protocol
+                # violation that costs the SENDER its connection (the
+                # raise lands in _service's malformed-message handler).
+                if "backlog" in msg:
+                    backlog = msg["backlog"]
+                    if (not isinstance(backlog, int)
+                            or isinstance(backlog, bool) or backlog < 0):
+                        raise ProtocolError(
+                            f"malformed heartbeat backlog: {backlog!r}")
+                    with self._lock:
+                        moved = lease.demand.observe(
+                            backlog, time.monotonic())
+                        if moved is not None:
+                            self.demand_regrants += 1
+                            self._regrant()
                 # the current grant rides the ack (idempotent refresh):
                 # a lost grant push heals within one heartbeat interval
                 try:
@@ -322,7 +488,8 @@ class NodeBroker:
                 with self._lock:
                     lease.share = max(0.0, float(msg.get("share", lease.share)))
                     if "slots" in msg:
-                        lease.want = max(1, int(msg["slots"]))
+                        lease.want = max(0, int(msg["slots"]))
+                        lease.demand.set_width(lease.want)
                     self._regrant()
         elif op == "rescale":
             # the MeshRescaleEvent routing: multiply the node share by the
@@ -394,32 +561,50 @@ class NodeBroker:
     # ------------------------------------------------------------------ #
     # apportionment (the LeaseTable consumer — caller holds self._lock)
     # ------------------------------------------------------------------ #
+    def _make_demand(self, want: int) -> DemandState:
+        return DemandState(want, beats=self.demand_beats,
+                           alpha=self.demand_alpha,
+                           min_interval=self.min_regrant_interval)
+
     def _regrant(self) -> None:
-        """Recompute every worker's grant and push the changes.
+        """Recompute every worker's grant and push the *changes*.
 
         Quotas come from the shared largest-remainder apportionment;
-        capacity a worker cannot use (``want < quota``) is redistributed
-        one slot at a time in the shared I5 borrow order — a worker only
-        exceeds its quota after every under-quota worker's demand is met,
-        the node-level grant rule."""
+        capacity a worker cannot use (its damped **effective want** — the
+        live-backlog demand model, not the static registration width — is
+        below its quota) is redistributed one slot at a time in the
+        shared I5 borrow order: a worker only exceeds its quota after
+        every under-quota worker's demand is met, the node-level grant
+        rule. Workers whose grant content is unchanged are NOT re-pushed
+        (``grants_suppressed``): a steady-state recompute — a heartbeat
+        or no-op resize at constant demand — costs zero sends, and the
+        idempotent grant copy riding every heartbeat ack remains the
+        healing path for a lost push."""
         self._table.recompute()
         entries = list(self._table.values())
         for e in entries:
-            e.granted = min(e.quota, e.want)
+            e.granted = min(e.quota, e.eff_want)
             e.in_use = e.granted
         pool = self.capacity - sum(e.granted for e in entries)
         while pool > 0:
-            hungry = [e for e in entries if e.want > e.granted]
+            hungry = [e for e in entries if e.eff_want > e.granted]
             if not hungry:
                 break
             e = borrow_order(hungry)[0]
             e.granted += 1
             e.in_use = e.granted
             pool -= 1
+        self.regrants += 1
+        dirty = [e for e in entries if (e.granted, e.quota) != e.last_pushed]
+        self.grants_suppressed += len(entries) - len(dirty)
+        if not dirty:
+            return  # nothing moved: no epoch burn, no pushes
         self._epoch += 1
-        for e in entries:
+        for e in dirty:
             try:
                 send_msg(e.conn, self._grant_msg(e, len(entries)))
+                e.last_pushed = (e.granted, e.quota)
+                self.grants_pushed += 1
             except OSError:
                 # a client not draining its socket (wedged) or already
                 # gone: grants are tiny, so a full buffer means hundreds
@@ -450,6 +635,10 @@ class NodeBroker:
                 "epoch": self._epoch,
                 "registrations": self.registrations,
                 "reclaims": self.reclaims,
+                "regrants": self.regrants,
+                "demand_regrants": self.demand_regrants,
+                "grants_pushed": self.grants_pushed,
+                "grants_suppressed": self.grants_suppressed,
                 "workers": self._worker_rows(),
             }
 
@@ -467,6 +656,8 @@ class NodeBroker:
                 "quota": l.quota,
                 "granted": l.granted,
                 "want": l.want,
+                "eff_want": l.eff_want,
+                "backlog": l.demand.last_backlog,
             }
         return rows
 
@@ -479,9 +670,18 @@ def main(argv=None) -> int:
     ap.add_argument("--capacity", type=int, default=None,
                     help="node slots to apportion (default: cpu count)")
     ap.add_argument("--heartbeat-timeout", type=float, default=1.0)
+    ap.add_argument("--demand-beats", type=int, default=3,
+                    help="hysteresis depth K for backlog-driven regrants")
+    ap.add_argument("--demand-alpha", type=float, default=0.5,
+                    help="EWMA weight for the backlog smoother")
+    ap.add_argument("--min-regrant-interval", type=float, default=0.25,
+                    help="per-worker floor (s) between demand regrants")
     args = ap.parse_args(argv)
     broker = NodeBroker(args.path, capacity=args.capacity,
-                        heartbeat_timeout=args.heartbeat_timeout)
+                        heartbeat_timeout=args.heartbeat_timeout,
+                        demand_beats=args.demand_beats,
+                        demand_alpha=args.demand_alpha,
+                        min_regrant_interval=args.min_regrant_interval)
     print(f"usf-node-broker: serving {broker.capacity} slots on "
           f"{broker.path}", flush=True)
     try:

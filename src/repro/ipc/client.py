@@ -7,6 +7,16 @@ elastic slot parking — a broker *revoke* shrinks the runtime's effective
 width at its tasks' next scheduling points (within one tick period for
 preemptive policies), a *grant* unparks and refills immediately.
 
+Heartbeats are also the **demand channel** (envelope v2): every beat
+piggybacks the worker's instantaneous runnable backlog — by default the
+bound runtime's lock-free ``runnable_backlog()`` probe (READY + RUNNING
+tasks), overridable with ``backlog_probe`` for workers whose demand
+lives elsewhere (e.g. a server process folding in its request-queue
+depth). The broker apportions over this live, hysteresis-damped demand
+instead of the static registration width, so an idle process's slots
+flow to a saturated sibling while the idle process stays alive and
+registered. ``report_backlog=False`` restores the static (v1) contract.
+
 Failure semantics (the paper's pure-user-space stance: coordination is an
 optimization, never a liveness dependency — and since PR 6, the system
 *heals*, it does not merely survive):
@@ -84,6 +94,14 @@ class BrokerClient:
                          (default: the bound runtime's topology width, or 1).
     heartbeat_interval:  seconds between heartbeats (keep well under the
                          broker's ``heartbeat_timeout``).
+    backlog_probe:       zero-arg callable returning this worker's current
+                         runnable backlog (non-negative int), sampled at
+                         every heartbeat. Default: the bound runtime's
+                         ``runnable_backlog`` (set by ``bind``); without a
+                         runtime or probe, beats carry no backlog and the
+                         broker applies static (v1) demand.
+    report_backlog:      ``False`` omits the backlog field even when a
+                         probe is available — the static-demand contract.
     reconnect:           heal after a broker loss (default). ``False`` is
                          the legacy terminal degrade: free-running forever.
     reconnect_backoff:   ``(base, cap)`` seconds for the backoff helper.
@@ -106,6 +124,8 @@ class BrokerClient:
     def __init__(self, path: str, *, name: str = "worker",
                  share: float = 1.0, slots: Optional[int] = None,
                  heartbeat_interval: float = 0.2,
+                 backlog_probe: Optional[Callable[[], int]] = None,
+                 report_backlog: bool = True,
                  reconnect: bool = True,
                  reconnect_backoff: tuple = (0.05, 2.0),
                  reconnect_timeout: Optional[float] = None,
@@ -118,6 +138,11 @@ class BrokerClient:
         self.share = float(share)
         self.slots = slots
         self.heartbeat_interval = float(heartbeat_interval)
+        self.backlog_probe = backlog_probe
+        self.report_backlog = bool(report_backlog)
+        #: last backlog value a heartbeat actually carried (None before
+        #: the first reporting beat, or when reporting is off)
+        self.last_backlog: Optional[int] = None
         self.reconnect = bool(reconnect)
         self.reconnect_backoff = reconnect_backoff
         self.reconnect_timeout = reconnect_timeout
@@ -156,11 +181,15 @@ class BrokerClient:
         """Wire grants into ``runtime`` (``UsfRuntime`` or ``SimExecutor`` —
         anything with ``set_slot_target``/``topology``): a pushed grant of
         ``n`` caps the runtime at ``max(1, n)`` slots; losing the broker
-        restores the full topology (free-running degrade). Call before
-        ``start()``."""
+        restores the full topology (free-running degrade). Unless an
+        explicit ``backlog_probe`` was given, heartbeats sample the
+        runtime's lock-free ``runnable_backlog()`` as the live demand
+        signal. Call before ``start()``."""
         self._runtime = runtime
         if self.slots is None:
             self.slots = runtime.topology.n_slots
+        if self.backlog_probe is None:
+            self.backlog_probe = getattr(runtime, "runnable_backlog", None)
         return self
 
     # ------------------------------------------------------------------ #
@@ -265,7 +294,10 @@ class BrokerClient:
                     "op": "register",
                     "name": self.name,
                     "share": self.share,
-                    "slots": int(self.slots or 1),
+                    # explicit 0 is legal demand (the idle-worker fix); only an
+                    # unset width defaults to 1
+                    "slots": 1 if self.slots is None
+                    else max(0, int(self.slots)),
                     "pid": os.getpid(),
                 })
             except OSError:
@@ -453,9 +485,24 @@ class BrokerClient:
             if self._faults is not None and self._faults.stall_heartbeat():
                 continue
             try:
-                self._send({"op": "heartbeat"})
+                self._send(self._beat_msg())
             except OSError:
                 continue  # loss is handled by the session thread
+
+    def _beat_msg(self) -> dict:
+        """One heartbeat, with the live backlog piggybacked (envelope v2)
+        when a probe is available. A failing probe degrades THIS beat to
+        v1 (no backlog field) — demand feedback is an optimization, never
+        a liveness dependency, same as coordination itself."""
+        msg = {"op": "heartbeat"}
+        if self.report_backlog and self.backlog_probe is not None:
+            try:
+                backlog = max(0, int(self.backlog_probe()))
+            except Exception:
+                return msg
+            self.last_backlog = backlog
+            msg["backlog"] = backlog
+        return msg
 
     def _apply_grant(self, slots: int) -> None:
         if self._runtime is not None:

@@ -6,20 +6,39 @@ big-endian length prefix followed by a UTF-8 JSON object with an ``op``
 field. The framing is deliberately tiny — the broker exchanges a handful
 of control messages per second, not data.
 
-Client → broker ops
+Client → broker ops (envelope v2; v1 differences noted inline)
     register    {name, share, slots, pid}      join the node lease table
-    heartbeat   {}                             liveness (and keepalive)
-    resize      {share}                        set this worker's share
+                (``slots`` is the worker's registered width — the demand
+                *ceiling*; 0 is legal: a pure best-effort process)
+    heartbeat   {backlog?}                     liveness (and keepalive).
+                v2 piggybacks ``backlog``: the sender's instantaneous
+                runnable backlog (READY + RUNNING tasks), a non-negative
+                int. The broker clamps it into [0, registered width] and
+                feeds the demand model (hysteresis-damped effective
+                want). v1 clients omit the field and keep the static
+                contract: effective want == registered width. A present
+                but malformed ``backlog`` (non-int, bool, or negative)
+                is a protocol violation and costs the SENDER its
+                connection — never the broker loop.
+    resize      {share, slots?}                set this worker's share
+                (and optionally its registered width)
     rescale     {scale}                        multiply share (mesh rescale)
     deregister  {}                             leave cleanly
     stats       {}                             request a table snapshot
 
 Broker → client ops
-    grant       {slots, quota, capacity, workers, epoch}
-                the worker's current node-slot grant (pushed on every
-                membership/share change; ``quota`` is the lease
-                entitlement before work-conserving redistribution)
+    grant       {slots, quota, capacity, workers, epoch, incarnation}
+                the worker's current node-slot grant (pushed when — and
+                since envelope v2 *only* when — this worker's grant
+                content changed; ``quota`` is the lease entitlement
+                before work-conserving redistribution). Unchanged grants
+                are not re-pushed: the idempotent copy riding every
+                heartbeat ack is the refresh/healing path.
     snapshot    {...}                          reply to ``stats``
+
+Version negotiation is deliberately absent: v2 is a pure superset (one
+optional heartbeat field), so v1 clients and v2 brokers — and vice
+versa — interoperate with static-demand semantics.
 """
 
 from __future__ import annotations

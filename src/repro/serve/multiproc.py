@@ -66,6 +66,18 @@ def _server_main(spec: dict, req_q, resp_q) -> None:
         client = None
         if spec.get("broker_path"):
             share = spec.get("share")
+
+            def _backlog() -> int:
+                # real demand, not topology width: the runtime's runnable
+                # tasks plus the gateway requests still queued toward this
+                # server — an idle server reports 0 and its node slots
+                # flow to a saturated sibling process
+                try:
+                    queued = req_q.qsize()
+                except (NotImplementedError, OSError):
+                    queued = 0  # qsize is unsupported on some platforms
+                return usf.runnable_backlog() + queued
+
             client = BrokerClient(
                 spec["broker_path"],
                 name=spec["name"],
@@ -73,6 +85,7 @@ def _server_main(spec: dict, req_q, resp_q) -> None:
                 # unset share defaults to 1.0
                 share=1.0 if share is None else share,
                 heartbeat_interval=spec.get("heartbeat_interval", 0.2),
+                backlog_probe=_backlog,
             ).bind(usf).start()
             client.wait_grant(5.0)  # coordinated before the first decode
         cfg = (get_smoke(spec["arch"]) if spec.get("smoke", True)

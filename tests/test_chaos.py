@@ -20,6 +20,7 @@ The unmarked smoke (a few seeds, short windows) rides tier-1 and
 
 import os
 import random
+import socket
 import tempfile
 import threading
 import time
@@ -27,6 +28,8 @@ import time
 import pytest
 
 from repro.ipc import BrokerClient, FaultPlan, NodeBroker
+from repro.ipc.broker import DemandState
+from repro.ipc.protocol import recv_msg, send_msg
 
 CAPACITY = 4
 N_CLIENTS = 3
@@ -85,17 +88,23 @@ def _run_chaos(seed: int, *, duration: float = 1.2,
     rng = random.Random(seed)
     fakes = [_Width() for _ in range(N_CLIENTS)]
     plans = [_chaos_plan(seed * 1000 + i) for i in range(N_CLIENTS)]
+    # live demand rides the chaos too: every heartbeat carries a backlog
+    # the driver churns during the fault window; saturated afterwards so
+    # the convergence invariants (grants sum to capacity) stay exact
+    backlogs = [{"v": CAPACITY} for _ in range(N_CLIENTS)]
     clients = []
     try:
         for i in range(N_CLIENTS):
             clients.append(BrokerClient(
                 path, name=f"c{i}", share=1.0 + i, slots=CAPACITY,
                 heartbeat_interval=0.05,
+                backlog_probe=(lambda cell=backlogs[i]: cell["v"]),
                 reconnect_backoff=(0.02, 0.2),
                 faults=plans[i]).bind(fakes[i]).start(connect_timeout=15.0))
 
         # fault window: protocol faults fire per message; the driver adds
-        # lease churn (resizes) and, in the sweep, a broker kill+restart
+        # lease churn (resizes + backlog swings) and, in the sweep, a
+        # broker kill+restart
         deadline = time.monotonic() + duration
         restart_at = (time.monotonic() + duration / 3
                       if restart_broker else None)
@@ -112,11 +121,15 @@ def _run_chaos(seed: int, *, duration: float = 1.2,
                 c.resize(0.5 + 2.5 * rng.random())
             except OSError:
                 pass  # BrokerLostError: typed, queued — by contract
+            backlogs[rng.randrange(N_CLIENTS)]["v"] = \
+                rng.randrange(0, CAPACITY + 1)
             time.sleep(0.01 + 0.03 * rng.random())
 
         # clear faults; the system must converge on its own, boundedly
         for p in plans:
             p.clear()
+        for cell in backlogs:
+            cell["v"] = CAPACITY  # everyone saturated: full wants again
         assert _wait_until(
             lambda: all(c.state == BrokerClient.COORDINATED
                         for c in clients), timeout=15.0), \
@@ -188,6 +201,135 @@ def test_fault_plan_horizon_disarms_and_releases_held():
     act, _, deliver = plan.recv_actions({"op": "grant", "epoch": 2})
     # disarmed recv releases the held message so nothing is lost forever
     assert [m["epoch"] for m in deliver] == [2, 1]
+
+
+# --------------------------------------------------------------------- #
+# backlog-hostile clients: the demand channel under abuse (PR 9)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("bad", ["wat", -1, 1.5, True, None])
+def test_hostile_backlog_drops_sender_not_broker(bad):
+    """A malformed backlog field (garbage type, negative, bool, float,
+    null) is a protocol violation: it costs the SENDER its connection
+    (lease reclaimed, slots flow to the sibling) and never the broker
+    loop or a sibling's coordination."""
+    path = _path()
+    broker = NodeBroker(path, capacity=CAPACITY, heartbeat_timeout=5.0)
+    broker.start()
+    survivor = BrokerClient(path, name="survivor", share=1.0,
+                            slots=CAPACITY, heartbeat_interval=0.05).start()
+    try:
+        assert survivor.wait_grant(5.0) == CAPACITY
+        hostile = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        hostile.connect(path)
+        send_msg(hostile, {"op": "register", "name": "hostile",
+                           "share": 1.0, "slots": CAPACITY, "pid": 0})
+        assert recv_msg(hostile)["op"] == "welcome"
+        assert recv_msg(hostile)["op"] == "grant"
+        assert _wait_until(lambda: survivor.granted == CAPACITY // 2, 5.0)
+
+        send_msg(hostile, {"op": "heartbeat", "backlog": bad})
+        # the offender is dropped and its lease reclaimed at once (no
+        # waiting out the heartbeat timeout, which is 5s here on purpose)
+        assert _wait_until(lambda: survivor.granted == CAPACITY, 3.0)
+        assert list(broker.snapshot()["workers"]) == ["survivor"]
+        hostile.close()
+        # the broker loop survived: a late registration still lands
+        late = BrokerClient(path, name="late", share=1.0, slots=CAPACITY,
+                            heartbeat_interval=0.05).start()
+        assert late.wait_grant(5.0) == CAPACITY // 2
+        late.stop()
+    finally:
+        survivor.stop()
+        broker.stop()
+
+
+def test_absent_backlog_is_v1_not_hostile():
+    """A heartbeat WITHOUT the backlog field is the v1 wire contract,
+    not a violation: the sender stays registered at static demand."""
+    path = _path()
+    broker = NodeBroker(path, capacity=CAPACITY, heartbeat_timeout=5.0)
+    broker.start()
+    try:
+        v1 = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        v1.connect(path)
+        send_msg(v1, {"op": "register", "name": "v1", "share": 1.0,
+                      "slots": CAPACITY, "pid": 0})
+        assert recv_msg(v1)["op"] == "welcome"
+        assert recv_msg(v1)["op"] == "grant"
+        for _ in range(5):
+            send_msg(v1, {"op": "heartbeat"})  # envelope v1: no backlog
+            # the ack is an idempotent grant copy (the healing path)
+            assert recv_msg(v1)["op"] == "grant"
+        snap = broker.snapshot()
+        assert list(snap["workers"]) == ["v1"]
+        assert snap["workers"]["v1"]["eff_want"] == CAPACITY  # static
+        assert snap["workers"]["v1"]["backlog"] is None
+        v1.close()
+    finally:
+        broker.stop()
+
+
+# --------------------------------------------------------------------- #
+# hysteresis state machine: seeded determinism (PR 9)
+# --------------------------------------------------------------------- #
+def _demand_trace(seed: int, *, beats=3, alpha=0.5, min_interval=0.25):
+    """Feed a seeded (backlog, dt) schedule through a DemandState and
+    record every decision — the replayable trace."""
+    rng = random.Random(seed)
+    ds = DemandState(CAPACITY, beats=beats, alpha=alpha,
+                     min_interval=min_interval)
+    now, out = 0.0, []
+    for _ in range(200):
+        now += 0.01 + 0.09 * rng.random()
+        out.append(ds.observe(rng.randrange(0, CAPACITY + 1), now))
+    return out, ds.eff
+
+
+def test_demand_state_is_deterministic():
+    """Same seed -> the same regrant decision sequence (no wall clock,
+    no hidden randomness inside the state machine: a demand-driven
+    chaos failure is replayable)."""
+    a, b = _demand_trace(42), _demand_trace(42)
+    assert a == b
+    assert any(d is not None for d in a[0])  # the schedule does move
+    assert _demand_trace(43) != _demand_trace(42)
+
+
+def test_demand_state_damps_flapping():
+    """A 0/full backlog square wave faster than the hysteresis depth
+    never moves the effective want: flap-damping by construction."""
+    ds = DemandState(CAPACITY, beats=3, alpha=0.5, min_interval=0.0)
+    now = 0.0
+    for i in range(60):
+        now += 0.05
+        assert ds.observe(0 if i % 2 else CAPACITY, now) is None
+    assert ds.eff == CAPACITY  # still the static registration width
+
+
+def test_demand_state_min_interval_rate_limits():
+    """Even a persistent one-sided shift regrants at most once per
+    min_interval window."""
+    ds = DemandState(CAPACITY, beats=1, alpha=1.0, min_interval=1.0)
+    assert ds.observe(0, now=0.0) == 0        # first move is free
+    moves = [ds.observe(CAPACITY, now=t / 10)
+             for t in range(1, 10)]           # 0.1 .. 0.9: inside window
+    assert moves == [None] * 9
+    assert ds.observe(CAPACITY, now=1.5) is not None  # window elapsed
+
+
+def test_demand_state_converges_monotone_shift():
+    """A step change in backlog walks eff to the new level and stays
+    there (EWMA + hysteresis converge, no overshoot ratchet)."""
+    ds = DemandState(CAPACITY, beats=2, alpha=0.5, min_interval=0.0)
+    now = 0.0
+    for _ in range(20):
+        now += 0.1
+        ds.observe(0, now)
+    assert ds.eff == 0
+    for _ in range(20):
+        now += 0.1
+        ds.observe(CAPACITY, now)
+    assert ds.eff == CAPACITY
 
 
 # --------------------------------------------------------------------- #

@@ -570,6 +570,171 @@ def test_reordered_grant_pair_is_fenced(broker):
             sib.stop()
 
 
+# --------------------------------------------------------------------- #
+# demand-aware apportionment: live backlog feedback (PR 9)
+# --------------------------------------------------------------------- #
+@pytest.fixture
+def demand_broker():
+    """Fast demand knobs so tests see regrants within a few heartbeats."""
+    b = NodeBroker(_path(), capacity=4, heartbeat_timeout=0.6,
+                   demand_beats=2, min_regrant_interval=0.0)
+    b.start()
+    yield b
+    b.stop()
+
+
+def test_idle_worker_slots_flow_to_saturated_sibling(demand_broker):
+    """THE idle-worker lease bug, fixed end to end: a registered-but-idle
+    worker (backlog 0) no longer pins half the node. Its lease drains to
+    the saturated sibling, while the idle worker itself keeps making
+    progress on the client-side 1-slot floor."""
+    rt = UsfRuntime(Topology(4, 1), SchedCoop())
+    idle = BrokerClient(demand_broker.path, name="idle", share=1.0,
+                        heartbeat_interval=0.05,
+                        backlog_probe=lambda: 0).bind(rt).start()
+    sat = BrokerClient(demand_broker.path, name="sat", share=1.0, slots=4,
+                       heartbeat_interval=0.05,
+                       backlog_probe=lambda: 8).start()
+    try:
+        assert idle.wait_grant(5.0) is not None
+        # pre-fix this converged to 2/2 forever (want floored at 1 at
+        # registration, demand static): now the idle half flows over
+        assert _wait_until(lambda: sat.granted == 4 and idle.granted == 0)
+        snap = demand_broker.snapshot()
+        assert snap["workers"]["idle"]["eff_want"] == 0
+        assert snap["workers"]["idle"]["backlog"] == 0
+        assert snap["workers"]["sat"]["eff_want"] == 4
+        # the zero grant lands as a 1-slot floor, not a stall: the idle
+        # worker still runs (throttled, never deadlocked)
+        assert rt.sched.slot_target() == 1
+        done = []
+        t = rt.create(lambda: done.append(1), job=Job("floor"))
+        assert rt.join(t, timeout=30.0)
+        assert done == [1]
+    finally:
+        idle.stop()
+        sat.stop()
+        rt.shutdown(timeout=5.0)
+
+
+def test_backlog_rise_reclaims_width_from_idle_state(demand_broker):
+    """The other half of the phase shift: when the idle worker's backlog
+    rises, the broker regrants width back (symmetric, no ratchet)."""
+    backlog = {"idle": 0}
+    idle = BrokerClient(demand_broker.path, name="idle", share=1.0, slots=4,
+                        heartbeat_interval=0.05,
+                        backlog_probe=lambda: backlog["idle"]).start()
+    sat = BrokerClient(demand_broker.path, name="sat", share=1.0, slots=4,
+                       heartbeat_interval=0.05,
+                       backlog_probe=lambda: 8).start()
+    try:
+        assert _wait_until(lambda: sat.granted == 4 and idle.granted == 0)
+        backlog["idle"] = 8  # the phase shift: idle worker saturates
+        assert _wait_until(lambda: idle.granted == 2 and sat.granted == 2)
+    finally:
+        idle.stop()
+        sat.stop()
+
+
+def test_want_zero_registration_is_legal(demand_broker):
+    """slots=0 must reach the broker as zero demand (was floored to 1 at
+    register/re-register/resize — the bug's third head): the zero-want
+    worker holds a lease but no slots, and the sibling takes the node."""
+    zero = BrokerClient(demand_broker.path, name="zero", share=1.0, slots=0,
+                        heartbeat_interval=0.05).start()
+    busy = BrokerClient(demand_broker.path, name="busy", share=1.0, slots=4,
+                        heartbeat_interval=0.05).start()
+    try:
+        assert _wait_until(lambda: busy.granted == 4 and zero.granted == 0)
+        snap = demand_broker.snapshot()
+        assert snap["workers"]["zero"]["want"] == 0
+        assert snap["workers"]["zero"]["eff_want"] == 0
+    finally:
+        zero.stop()
+        busy.stop()
+
+
+def test_v1_client_without_backlog_keeps_static_demand(demand_broker):
+    """Backward compatibility: a client that never reports backlog
+    (report_backlog=False — the v1 wire contract) keeps its static
+    registration width as effective want, even sitting fully idle next
+    to a saturated demand-reporting sibling."""
+    rt = UsfRuntime(Topology(4, 1), SchedCoop())  # idle: backlog would be 0
+    v1 = BrokerClient(demand_broker.path, name="v1", share=1.0,
+                      heartbeat_interval=0.05,
+                      report_backlog=False).bind(rt).start()
+    sat = BrokerClient(demand_broker.path, name="sat", share=1.0, slots=4,
+                       heartbeat_interval=0.05,
+                       backlog_probe=lambda: 8).start()
+    try:
+        assert _wait_until(lambda: v1.granted == 2 and sat.granted == 2)
+        time.sleep(0.5)  # many damping windows: a v1 lease must not decay
+        assert v1.granted == 2 and sat.granted == 2
+        assert demand_broker.snapshot()["workers"]["v1"]["backlog"] is None
+    finally:
+        v1.stop()
+        sat.stop()
+        rt.shutdown(timeout=5.0)
+
+
+def test_steady_backlog_quiesces_regrant_pushes(demand_broker):
+    """Acceptance: a steady workload with constant backlog causes ZERO
+    regrant pushes after convergence, and a content-neutral recompute
+    (same-share resize) is suppressed by the grant dedupe instead of
+    re-pushed."""
+    c1 = BrokerClient(demand_broker.path, name="w1", share=1.0, slots=4,
+                      heartbeat_interval=0.05,
+                      backlog_probe=lambda: 4).start()
+    c2 = BrokerClient(demand_broker.path, name="w2", share=1.0, slots=4,
+                      heartbeat_interval=0.05,
+                      backlog_probe=lambda: 4).start()
+    try:
+        assert _wait_until(lambda: c1.granted == 2 and c2.granted == 2)
+        before = demand_broker.snapshot()
+        time.sleep(0.5)  # ~10 heartbeats per client at constant backlog
+        after = demand_broker.snapshot()
+        assert after["grants_pushed"] == before["grants_pushed"]
+        assert after["demand_regrants"] == before["demand_regrants"]
+        assert after["epoch"] == before["epoch"]
+
+        # a regrant pass whose outcome is unchanged pushes nothing: the
+        # dedupe counts both suppressions, the epoch does not burn
+        c1.resize(1.0)
+        assert _wait_until(
+            lambda: demand_broker.snapshot()["grants_suppressed"]
+            >= after["grants_suppressed"] + 2)
+        final = demand_broker.snapshot()
+        assert final["grants_pushed"] == after["grants_pushed"]
+        assert final["epoch"] == after["epoch"]
+        assert c1.granted == 2 and c2.granted == 2
+    finally:
+        c1.stop()
+        c2.stop()
+
+
+def test_failing_backlog_probe_degrades_to_static(demand_broker):
+    """A probe that raises must not kill the heartbeat thread or the
+    lease: the client beats without the field (v1 semantics) and stays
+    coordinated."""
+    def bad_probe():
+        raise RuntimeError("probe exploded")
+
+    c = BrokerClient(demand_broker.path, name="w0", share=1.0, slots=4,
+                     heartbeat_interval=0.05, backlog_probe=bad_probe)
+    c.start()
+    try:
+        assert c.wait_grant(5.0) == 4
+        time.sleep(0.3)  # several beats, every probe call raising
+        assert c.granted == 4
+        assert c.state == BrokerClient.COORDINATED
+        assert c.last_backlog is None
+        snap = demand_broker.snapshot()
+        assert snap["workers"]["w0"]["backlog"] is None
+        assert snap["workers"]["w0"]["eff_want"] == 4
+    finally:
+        c.stop()
+
+
 def test_legacy_terminal_degrade_still_available():
     """reconnect=False restores the PR 5 contract: a broker loss is a
     terminal free-running degrade — no reconnect attempts ever."""
