@@ -11,9 +11,13 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 ## the sched-ops/arbiter microbench in smoke mode, perf-gated:
 ## SCHED_COOP/SCHED_FAIR pick-cycle throughput within 30% and the
 ## real-thread preempt cycle within 60% of the committed
-## BENCH_sched_ops.json baseline — plus the cross-process broker benchmark
-## in smoke mode (machinery end-to-end; the >=1.5x ratio is asserted only
-## in the full nightly run), the fault-recovery benchmark in smoke mode
+## BENCH_sched_ops.json baseline, the auto-checkpoint wrapper overhead
+## under an absolute 5% per-step ceiling, and the urgent-preempt p50
+## under a 10x-baseline/2ms ceiling — plus the cross-process broker
+## benchmark in smoke mode (machinery end-to-end, including the
+## real_model auto-checkpoint scenario; the ratio/latency targets are
+## asserted only in the full nightly run), the fault-recovery benchmark
+## in smoke mode
 ## (broker-kill MTTR + grant-convergence machinery), the open-arrival
 ## SLO load-generator in smoke mode (deadline-aware vs share-only A/B
 ## machinery; the win criteria are asserted on the full nightly sweep)

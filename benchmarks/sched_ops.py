@@ -55,13 +55,27 @@ from repro.core.topology import Topology
 MIN_SAMPLE_S = 0.5  # keep timing chunks above this to dampen jitter
 
 GATED_KEYS = ("policy.fair.pick_cycle", "policy.coop.pick_cycle",
-              "sched.preempt_cycle")
+              "sched.preempt_cycle", "sched.auto_ckpt_overhead",
+              "sched.urgent_preempt_latency")
 #: per-key max-drop overrides (fraction below baseline that still passes).
 #: sched.preempt_cycle's committed baseline is the POST-fast-path number
 #: (self-ticking checkpoints, ~2 orders of magnitude above the watchdog-
 #: driven cycle): a 0.6 floor still pins the 10x-over-the-old-path claim
 #: with a wide margin while absorbing shared-host scheduling noise.
 GATE_DROP_OVERRIDES = {"sched.preempt_cycle": 0.60}
+#: sched.auto_ckpt_overhead gates on an ABSOLUTE ceiling, not a baseline
+#: ratio: the whole point of the dispatch-boundary wrapper is that its
+#: cost is a fixed, tiny fraction of a step — if the fraction itself
+#: creeps toward the ceiling the instrumentation story is broken no
+#: matter what the previous commit measured. Target ~2%, ceiling 5%.
+AUTO_CKPT_OVERHEAD_CEILING = 0.05
+#: sched.urgent_preempt_latency gates on p50 (latency, lower-is-better)
+#: with a generous floor: 10x the committed baseline p50 or 2ms,
+#: whichever is larger — wide enough for shared-host noise, tight enough
+#: that a lost urgent-grant fast path (which would land at the watchdog
+#: period, ~10ms+) fails loudly.
+URGENT_LATENCY_FLOOR_S = 2e-3
+URGENT_LATENCY_RATIO = 10.0
 
 
 def _ops_per_sec(cycle, iters_hint: int, repeat: int = 1) -> tuple[float, int]:
@@ -312,9 +326,10 @@ def bench_urgent_preempt_latency(*, trials: int = 50) -> dict:
     ``DeadlineArbiter`` fires ``urgent_preempt`` at on-ready time — CV
     kick, checkpoint-consumed flag, successor-hinted redispatch — and the
     trial measures submit() -> first instruction of the task body. This
-    is the latency the SLO story rides on (tracked, not gated: it is a
-    latency, and the preempt-cycle gate already pins the same path's
-    throughput)."""
+    is the latency the SLO story rides on — gated in ``check_gate`` on
+    p50 with a generous ceiling (see ``URGENT_LATENCY_FLOOR_S``): losing
+    the urgent-grant fast path would push p50 to the watchdog period and
+    fail loudly, while host noise stays well inside the margin."""
     import threading
 
     from repro.core.deadline import DeadlineArbiter
@@ -368,6 +383,66 @@ def bench_urgent_preempt_latency(*, trials: int = 50) -> dict:
     return {"trials": len(xs), "mean_s": sum(xs) / len(xs),
             "p50_s": pct(0.50), "p99_s": pct(0.99), "max_s": xs[-1],
             "urgent_grants": urgents, "watchdog_kicks": kicks}
+
+
+def bench_auto_ckpt_overhead(*, step_s: float = 50e-6, steps: int = 2000,
+                             repeat: int = 3) -> dict:
+    """Per-dispatch cost of the auto-checkpoint wrapper, interleaved A/B.
+
+    One gated USF task times ``steps`` calls of a CPU-bound step function
+    bare, then the same function behind ``autockpt.preemptible`` (which
+    runs ``usf.checkpoint()`` — the real two-read fast path — before every
+    call), alternating the two modes ``repeat`` times in the same task so
+    both see identical host conditions. ``overhead_frac`` is the relative
+    per-step cost of the wrapped mode over bare, best-of-``repeat`` per
+    mode (min per-step time is the least-noisy estimate). Gated in
+    ``check_gate`` against the ABSOLUTE ceiling
+    ``AUTO_CKPT_OVERHEAD_CEILING`` — see the constant's comment."""
+    from repro.core.autockpt import preemptible
+    from repro.core.threads import UsfRuntime
+
+    rt = UsfRuntime(Topology(1, 1), SchedCoop())
+
+    def step():
+        t_end = time.perf_counter() + step_s
+        while time.perf_counter() < t_end:
+            pass
+
+    wstep = preemptible(step, runtime=rt)
+    samples: dict = {"bare": [], "wrapped": []}
+    ckpt_ns = [0.0]
+
+    def body():
+        # warm both paths (bytecode caches, the checkpoint fast path)
+        for _ in range(50):
+            step()
+            wstep()
+        for _ in range(max(1, repeat)):
+            for name, fn in (("bare", step), ("wrapped", wstep)):
+                t0 = time.perf_counter()
+                for _ in range(steps):
+                    fn()
+                samples[name].append((time.perf_counter() - t0) / steps)
+        # raw checkpoint cost in the same gated-task context, for context
+        n = 20_000
+        ckpt = rt.checkpoint
+        t0 = time.perf_counter()
+        for _ in range(n):
+            ckpt()
+        ckpt_ns[0] = (time.perf_counter() - t0) / n * 1e9
+
+    task = rt.create(body, job=Job("bench-ackpt"))
+    assert rt.join(task, timeout=600.0), "overhead bench task never finished"
+    rt.shutdown(timeout=5.0)
+    bare = min(samples["bare"])
+    wrapped = min(samples["wrapped"])
+    return {
+        "overhead_frac": max(0.0, wrapped / bare - 1.0),
+        "bare_step_us": bare * 1e6,
+        "wrapped_step_us": wrapped * 1e6,
+        "checkpoint_ns": ckpt_ns[0],
+        "step_s": step_s, "steps": steps, "repeat": max(1, repeat),
+    }
 
 
 # --------------------------------------------------------------------------- #
@@ -443,15 +518,49 @@ def _bench_sim_events_once(kind: str, *, scale: float) -> dict:
 
 
 def check_gate(results: dict, baseline_path: str, max_drop: float) -> list[str]:
-    """Compare the gated pick-cycle metrics against a committed baseline;
-    returns a list of failure messages (empty = gate passed)."""
+    """Compare the gated metrics against a committed baseline; returns a
+    list of failure messages (empty = gate passed). Three gate shapes:
+
+    * throughput keys (the default): ops/sec must stay within
+      ``max_drop`` (or the per-key override) of the baseline;
+    * ``sched.auto_ckpt_overhead``: overhead_frac must stay under the
+      ABSOLUTE ``AUTO_CKPT_OVERHEAD_CEILING`` — baseline-independent;
+    * ``sched.urgent_preempt_latency``: p50 must stay under
+      max(RATIO x baseline p50, FLOOR) — latency, lower-is-better."""
     with open(baseline_path) as f:
         baseline = json.load(f)["results"]
     failures = []
     for key in GATED_KEYS:
         base = baseline.get(key)
         cur = results.get(key)
-        if base is None or cur is None:
+        if cur is None:
+            continue
+        if key == "sched.auto_ckpt_overhead":
+            frac = cur["overhead_frac"]
+            ceiling = AUTO_CKPT_OVERHEAD_CEILING
+            verdict = "ok" if frac <= ceiling else "FAIL"
+            print(f"gate {key}: wrapped-step overhead {frac:.2%} "
+                  f"(absolute ceiling {ceiling:.0%}) {verdict}")
+            if frac > ceiling:
+                failures.append(
+                    f"{key} over ceiling: {frac:.2%} > {ceiling:.0%} "
+                    f"(bare {cur['bare_step_us']:.1f}us vs wrapped "
+                    f"{cur['wrapped_step_us']:.1f}us per step)")
+            continue
+        if base is None:
+            continue
+        if key == "sched.urgent_preempt_latency":
+            ceiling = max(URGENT_LATENCY_RATIO * base["p50_s"],
+                          URGENT_LATENCY_FLOOR_S)
+            verdict = "ok" if cur["p50_s"] <= ceiling else "FAIL"
+            print(f"gate {key}: p50 {cur['p50_s'] * 1e6:,.0f}us vs baseline "
+                  f"{base['p50_s'] * 1e6:,.0f}us "
+                  f"(ceiling {ceiling * 1e6:,.0f}us) {verdict}")
+            if cur["p50_s"] > ceiling:
+                failures.append(
+                    f"{key} regressed: p50 {cur['p50_s'] * 1e6:,.0f}us > "
+                    f"ceiling {ceiling * 1e6:,.0f}us "
+                    f"(baseline {base['p50_s'] * 1e6:,.0f}us)")
             continue
         drop = GATE_DROP_OVERRIDES.get(key, max_drop)
         floor = (1.0 - drop) * base["ops_per_sec"]
@@ -541,6 +650,15 @@ def main(argv=None) -> int:
     print(f"sched.urgent_preempt_latency: p50 {r['p50_s'] * 1e6:,.0f}us "
           f"p99 {r['p99_s'] * 1e6:,.0f}us max {r['max_s'] * 1e6:,.0f}us "
           f"({r['trials']} trials, {r['urgent_grants']} urgent grants)")
+    # gated even in smoke mode: absolute ceiling, best-of-3 when gating
+    r = bench_auto_ckpt_overhead(
+        steps=500 if args.smoke else 2000,
+        repeat=3 if (args.gate or not args.smoke) else 1)
+    results["sched.auto_ckpt_overhead"] = r
+    print(f"sched.auto_ckpt_overhead: {r['overhead_frac']:.2%} per step "
+          f"(bare {r['bare_step_us']:.1f}us -> wrapped "
+          f"{r['wrapped_step_us']:.1f}us, checkpoint "
+          f"{r['checkpoint_ns']:,.0f}ns, best of {r['repeat']})")
     for kind in ("yield_churn", "fair_ticks"):
         r = bench_sim_events(kind, scale=scale,
                              repeat=1 if args.smoke else 2)

@@ -25,9 +25,17 @@ A centralized, multi-job, user-space scheduling framework:
 * ``threads``             — real-thread executor ("glibcv" analogue): gates
   genuine Python threads (which dispatch genuine JAX work), preserves TLS,
   caches threads across create/join cycles (§4.3.1).
+* ``autockpt``            — auto-checkpoint instrumentation: wrap jitted
+  step functions (``preemptible``/``wrap_jit``) or hot loops
+  (``maybe_checkpoint``) so every dispatch boundary is a preemption
+  point, with a ``SimExecutor`` twin (``preemptible_body``) injecting
+  the sim's checkpoint op at the same boundaries. The four preemption
+  delivery tiers are documented in docs/PREEMPTION.md.
 """
 
 from repro.core.task import Task, Job, TaskState
+from repro.core.autockpt import (maybe_checkpoint, preemptible,
+                                 preemptible_body, wrap_jit)
 from repro.core.topology import Topology, Slot
 from repro.core.arbiter import ArbiterError, SlotArbiter, SlotLease
 from repro.core.lease import LeaseTable, apportion, borrow_order
@@ -55,4 +63,8 @@ __all__ = [
     "SchedRR",
     "sync",
     "SchedStats",
+    "preemptible",
+    "wrap_jit",
+    "maybe_checkpoint",
+    "preemptible_body",
 ]

@@ -529,7 +529,10 @@ class SimExecutor:
             # an external preemption request against this slot — is
             # consumed here; unflagged it is a no-op and the generator
             # keeps advancing. The sim is single-threaded, so the flag
-            # cannot vanish between the peek and the consume.
+            # cannot vanish between the peek and the consume. Bodies need
+            # not yield this op by hand: ``autockpt.preemptible_body``
+            # injects it every N ops, mirroring the thread executor's
+            # checkpoint-at-dispatch wrappers boundary for boundary.
             if self.sched.preempt_requested(task):
                 self._bump(task)
                 self.sched.consume_preempt(task)
@@ -771,7 +774,13 @@ class SimExecutor:
         if running is None:
             return  # re-armed on next dispatch
         pol = self.sched.policy_of(running.job)
-        if pol.preemptive and pol.tick_interval is not None:
+        if not pol.preemptive:
+            # stale tick: armed for a previous preemptive occupant, but the
+            # slot now runs a cooperative-policy task (I2: never preempted
+            # here even with need_resched set — the flag stays for the task
+            # to consume at its next scheduling point / checkpoint)
+            return
+        if pol.tick_interval is not None:
             # mirror the watchdog's adaptation observation (same controller,
             # same signals) before the re-arm below reads the new period
             arb = self.sched.arbiter

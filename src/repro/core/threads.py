@@ -653,8 +653,20 @@ class UsfRuntime:
         ``sched.preempt_cycle`` number from tick-period-bound (~100/s) to
         checkpoint-bound. The watchdog remains the backstop for tasks
         that checkpoint rarely (and the only driver for lease-revocation
-        flags on slots whose task never self-expires)."""
-        task = self._require_task()
+        flags on slots whose task never self-expires).
+
+        Safe to call from anywhere: a plain (non-USF) thread and a
+        free-running (``gating=False``) task both no-op, so library code
+        can sprinkle checkpoints unconditionally — the auto-checkpoint
+        wrappers (``repro.core.autockpt``) rely on this to keep
+        instrumented code identical between coordinated runs and
+        free-running baselines. The full delivery-latency ladder
+        (blocking point / explicit checkpoint / auto-checkpoint at
+        dispatch / watchdog backstop) is documented in
+        docs/PREEMPTION.md."""
+        task = self.current_task()
+        if task is None:
+            return  # plain thread: checkpoints are unconditional no-ops
         st = task._slot_state
         if st is None:
             return  # not scheduler-dispatched (free-running baseline mode)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autockpt import maybe_checkpoint
+
 
 class SyntheticLMDataset:
     """Markov-ish synthetic token stream with learnable structure (so smoke
@@ -84,12 +86,21 @@ class PrefetchLoader:
         self._step = start_step
         self._stop = False
         self._usf = usf
+        # the generation-counter checkpoint tier (non-JAX hot loop): the
+        # fill thread is a plain thread today, so the tick no-ops — but
+        # the instrumentation is unconditional, so if the loader is ever
+        # hosted on a gated task it is already revocable at batch
+        # granularity (docs/PREEMPTION.md tier 3)
+        self._tick = (maybe_checkpoint(usf, every=4) if usf is not None
+                      else None)
         self._thread = threading.Thread(target=self._fill, daemon=True)
         self._thread.start()
 
     def _fill(self) -> None:
         step = self._step
         while not self._stop:
+            if self._tick is not None:
+                self._tick()
             batch = self.dataset.batch_at(step)
             while not self._stop:
                 try:

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autockpt import wrap_jit
 from repro.core.policies import Policy, SchedCoop
 from repro.core.scheduler import REC_REQ_DONE, REC_REQUEST
 from repro.core.sync import CoopChannel, CoopEvent
@@ -76,7 +77,7 @@ class InferenceServer:
     def __init__(self, name: str, cfg, usf: UsfRuntime, *,
                  max_batch: int = 2, max_len: int = 64, seed: int = 0,
                  nice: int = 0, share: Optional[float] = None,
-                 policy: Optional[Policy] = None):
+                 policy: Optional[Policy] = None, auto_ckpt: bool = True):
         self.name = name
         self.cfg = cfg
         self.usf = usf
@@ -92,6 +93,11 @@ class InferenceServer:
                                 self.model.param_specs(), cfg.param_dtype)
         self._step = jax.jit(make_serve_step(self.model, self.sharder),
                              donate_argnums=(1,))
+        if auto_ckpt:
+            # every decode dispatch is a preemption point: a broker revoke
+            # or elastic shrink parks this worker within ~one engine step
+            # even when the batch never drains (docs/PREEMPTION.md tier 3)
+            self._step = wrap_jit(self._step, runtime=usf)
         self._task = None
         self._stop = False
         self.served = 0

@@ -96,6 +96,11 @@ def _server_main(spec: dict, req_q, resp_q) -> None:
             max_len=int(spec.get("max_len", 32)),
             nice=int(spec.get("nice", 0)),
             share=spec.get("job_share"),
+            # auto-checkpointed decode (default): a broker regrant parks
+            # this server's surplus slots within ~one engine step even
+            # while it is decode-saturated, instead of waiting for the
+            # batch to drain to a blocking point
+            auto_ckpt=bool(spec.get("auto_ckpt", True)),
         )
         server.start()
         resp_q.put({"ready": True, "pid": os.getpid()})
@@ -140,7 +145,8 @@ class ServerProcess:
                  broker_path: Optional[str] = None,
                  slots: int = 2, share: Optional[float] = None,
                  nice: int = 0, max_batch: int = 2, max_len: int = 32,
-                 smoke: bool = True, heartbeat_interval: float = 0.2):
+                 smoke: bool = True, heartbeat_interval: float = 0.2,
+                 auto_ckpt: bool = True):
         self.name = name
         self.spec = {
             "name": name,
@@ -154,6 +160,7 @@ class ServerProcess:
             "max_len": max_len,
             "smoke": smoke,
             "heartbeat_interval": heartbeat_interval,
+            "auto_ckpt": auto_ckpt,
         }
         self._req_q = _CTX.Queue()
         self._resp_q = _CTX.Queue()

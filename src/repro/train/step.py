@@ -6,6 +6,13 @@ GSPMD's job (params are sharded/replicated by the in_shardings; XLA emits
 the reduce-scatter/all-reduce and overlaps it with the backward when the
 latency-hiding scheduler allows); microbatching bounds activation memory
 with a scan whose carry is the fp32 grad accumulator.
+
+Preemption: nothing in these factories checkpoints, deliberately — a
+``usf.checkpoint()`` cannot run inside a traced function (it would
+execute once at trace time, then never again). The preemption point for
+a jitted step is its *call site*: the trainer and the serving engine
+wrap the jitted function with ``repro.core.autockpt`` so every dispatch
+boundary checkpoints (docs/PREEMPTION.md tier 3).
 """
 
 from __future__ import annotations

@@ -22,6 +22,7 @@ import jax
 import numpy as np
 
 from repro.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.core.autockpt import preemptible
 from repro.data.pipeline import PrefetchLoader, SyntheticLMDataset
 from repro.models.base import init_tree
 from repro.models.registry import build_model
@@ -85,6 +86,11 @@ class Trainer:
             ),
             donate_argnums=(0,),
         )
+        if usf is not None:
+            # auto-checkpoint at the step-dispatch boundary: revokes land
+            # between steps even before the end-of-step yield below, and
+            # the same instrumented path no-ops when run outside a task
+            self._step_fn = preemptible(self._step_fn, runtime=usf)
 
     # ------------------------------------------------------------------ #
     def init_state(self) -> dict:

@@ -48,6 +48,7 @@ import pytest
 
 from repro.core import simtask as st
 from repro.core.arbiter import ArbiterError
+from repro.core.autockpt import preemptible_body
 from repro.core.deadline import DeadlineArbiter
 from repro.core.events import SimExecutor
 from repro.core.policies import SchedCoop, SchedFair, SchedRR
@@ -130,7 +131,12 @@ def spawn_task(sim, rng, job, *, deadline=None) -> TaskModel:
             else:
                 yield st.sem_acquire(sem)
 
-    task = sim.spawn(job, gen, deadline=deadline)
+    # half the fuzz programs run auto-instrumented (repro.core.autockpt):
+    # checkpoints injected between ops must preserve every invariant —
+    # they are extra scheduling points, never extra blocks or wakes
+    body = (preemptible_body(gen, every=rng.choice((1, 2, 3)))
+            if rng.random() < 0.5 else gen)
+    task = sim.spawn(job, body, deadline=deadline)
     return TaskModel(task, sem, n_blocks)
 
 
